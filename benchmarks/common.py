@@ -1,0 +1,116 @@
+"""Shared benchmark harness: builds the standard experimental setup of the
+paper's §VI (20 devices, 3FNN/2FNN, synthetic MNIST-like data, complete
+graph unless stated) and provides CSV emission helpers.
+
+Every benchmark prints `name,us_per_call,derived` rows; `derived` carries
+the figure's own metric (accuracy, comm-MB, latency units, ...).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core import (
+    BaselineConfig,
+    DFedAvg,
+    DFedRW,
+    DFedRWConfig,
+    DSGD,
+    FedAvg,
+    QuantConfig,
+    StragglerModel,
+    make_topology,
+    train_loop,
+)
+from repro.core.heterogeneity import (
+    partition_dirichlet,
+    partition_nonbalance,
+    partition_similarity,
+)
+from repro.data import FederatedDataset, synthetic_image_classification
+from repro.models import make_fnn
+
+N_DEVICES = 20
+NOISE = 2.0
+ROUNDS = int(__import__("os").environ.get("REPRO_BENCH_ROUNDS", 80))
+SEED = 7
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+    sys.stdout.flush()
+
+
+def load_data(u: int | None = 50, scheme: str = "similarity", alpha: float = 0.1,
+              n_train: int = 8000, n_test: int = 1000):
+    x, y = synthetic_image_classification(n_samples=n_train, seed=0, noise=NOISE)
+    xt, yt = synthetic_image_classification(n_samples=n_test, seed=1, noise=NOISE)
+    rng = np.random.default_rng(SEED)
+    if scheme == "similarity":
+        part = partition_similarity(y, N_DEVICES, u, rng)
+    elif scheme == "dirichlet":
+        part = partition_dirichlet(y, N_DEVICES, alpha, rng)
+    elif scheme == "nonbalance":
+        part = partition_nonbalance(y, N_DEVICES, rng, max_per_label=1500)
+    else:
+        raise ValueError(scheme)
+    return FederatedDataset.from_partition(x, y, part), xt, yt
+
+
+def run_algo(algo: str, data, xt, yt, *, topo_name: str = "complete", h: float = 0.0,
+             epochs: int = 5, m_chains: int = 5, bits: int = 32, rounds: int | None = None,
+             agg_fraction: float = 0.25, n_agg: int = 5, lr_r: float = 5.0,
+             chain_mode: bool = False, seed: int = 0):
+    topo = make_topology(topo_name, data.n_clients)
+    model = make_fnn((200, 200))  # 3FNN unless a benchmark overrides
+    strag = StragglerModel(h_percent=h)
+    quant = QuantConfig(bits=bits)
+    rounds = rounds or ROUNDS
+    t0 = time.time()
+    if algo == "dfedrw":
+        cfg = DFedRWConfig(m_chains=m_chains, k_walk=epochs, straggler=strag,
+                           quant=quant, agg_fraction=agg_fraction, n_agg=n_agg,
+                           lr_r=lr_r, chain_mode=chain_mode, seed=seed)
+        runner = DFedRW(model, data, topo, cfg)
+    else:
+        # FedAvg selects 25% of devices per round (paper §VI-B); DFedAvg and
+        # DSGD are all-participation protocols [15] (every device trains and
+        # gossips each round) -- the strongest-baseline setting. DFedRW uses
+        # M=5 chains (25% of devices start a walk).
+        cls = {"fedavg": FedAvg, "dfedavg": DFedAvg, "dsgd": DSGD}[algo]
+        n_sel = (max(1, int(round(data.n_clients * agg_fraction)))
+                 if algo == "fedavg" else data.n_clients)
+        cfg = BaselineConfig(n_selected=n_sel, local_epochs=epochs, straggler=strag,
+                             quant=quant, n_agg=n_agg, lr_r=lr_r, seed=seed)
+        runner = cls(model, data, topo, cfg)
+    hist = train_loop(runner, rounds, xt, yt, eval_every=max(rounds // 8, 1))
+    wall = time.time() - t0
+    us_per_round = wall / rounds * 1e6
+    return hist, us_per_round
+
+
+def run_fnn2(algo: str, data, xt, yt, **kw):
+    """Fig. 9/10 use the 2FNN."""
+    from repro.models import make_fnn as _mf
+
+    topo = make_topology(kw.pop("topo_name", "complete"), data.n_clients)
+    model = _mf((100,))
+    strag = StragglerModel(h_percent=kw.pop("h", 0.0))
+    quant = QuantConfig(bits=kw.pop("bits", 32))
+    epochs = kw.pop("epochs", 5)
+    rounds = kw.pop("rounds", ROUNDS)
+    t0 = time.time()
+    if algo == "dfedrw":
+        cfg = DFedRWConfig(m_chains=kw.pop("m_chains", 5), k_walk=epochs,
+                           straggler=strag, quant=quant, n_agg=kw.pop("n_agg", 5),
+                           lr_q=kw.pop("lr_q", 0.499))
+        runner = DFedRW(model, data, topo, cfg)
+    else:
+        cls = {"fedavg": FedAvg, "dfedavg": DFedAvg, "dsgd": DSGD}[algo]
+        cfg = BaselineConfig(n_selected=data.n_clients, local_epochs=epochs,
+                             straggler=strag, quant=quant, n_agg=kw.pop("n_agg", 5))
+        runner = cls(model, data, topo, cfg)
+    hist = train_loop(runner, rounds, xt, yt, eval_every=max(rounds // 8, 1))
+    return hist, (time.time() - t0) / rounds * 1e6

@@ -1,0 +1,15 @@
+"""Paper Fig. 10: walk epochs (DFedRW) vs local epochs (DFedAvg), K in {1,3,5}."""
+from benchmarks.common import emit, load_data, run_fnn2
+
+
+def run():
+    for u, h in [(100, 0), (0, 90)]:
+        data, xt, yt = load_data(u=u)
+        for k in (1, 3, 5):
+            for algo in ("dfedrw", "dfedavg"):
+                hist, us = run_fnn2(algo, data, xt, yt, epochs=k, h=h, lr_q=0.501)
+                emit(f"fig10/u{u}-h{h}/{algo}-K{k}", us, f"acc={hist.test_accuracy[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Paper Fig. 12 / Eq. 18: accuracy per MB of the busiest device,
+DFedRW vs DFedRW-E3 vs 8-bit QDFedRW vs baselines, u=50/h=50 and u=0/h=50."""
+from benchmarks.common import emit, load_data, run_algo
+
+
+def run():
+    for u in (50, 0):
+        data, xt, yt = load_data(u=u)
+        cases = [
+            ("dfedrw", dict()),
+            ("dfedrw-e3", dict(topo_name="expander3", n_agg=3)),
+            ("qdfedrw-8b", dict(bits=8)),
+            ("fedavg", dict()),
+            ("dfedavg", dict()),
+            ("dsgd", dict()),
+        ]
+        for name, kw in cases:
+            algo = "dfedrw" if name.startswith(("dfedrw", "qdfedrw")) else name
+            hist, us = run_algo(algo, data, xt, yt, h=50, m_chains=5, **kw)
+            mb = hist.comm_bits_busiest[-1] / 8e6
+            acc = hist.test_accuracy[-1]
+            emit(f"fig12/u{u}-h50/{name}", us,
+                 f"acc={acc:.4f};busiest_mb={mb:.2f};acc_per_mb={acc/max(mb,1e-9):.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Paper Fig. 13/14 + Table IV context: LSTM next-word prediction with
+chain-mode DFedRW vs FedAvg; quantized variants."""
+import time
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (BaselineConfig, DFedRW, DFedRWConfig, FedAvg,
+                        QuantConfig, make_topology, train_loop)
+from repro.core.heterogeneity import Partition
+from repro.data import FederatedDataset
+from repro.data.synthetic import synthetic_token_stream
+from repro.models import make_lstm_lm
+
+ROUNDS = int(__import__("os").environ.get("REPRO_BENCH_ROUNDS", 60))
+
+
+def run():
+    n_clients = 64
+    toks, nxt, client = synthetic_token_stream(n_clients=n_clients, seq_len=12,
+                                               seqs_per_client=48, vocab=500,
+                                               client_vocab=60, seed=0)
+    idxs = [np.nonzero(client == c)[0] for c in range(n_clients)]
+    data = FederatedDataset.from_partition(toks, nxt[:, -1],
+                                           Partition(idxs, n_clients))
+    topo = make_topology("complete", n_clients)
+    model = make_lstm_lm(vocab=500, embed=48, hidden=96, layers=2)
+    xt, yt = toks[:768], nxt[:768, -1]
+
+    for k in (3, 5):
+        t0 = time.time()
+        cfg = DFedRWConfig(m_chains=10, k_walk=k, batch_size=32, chain_mode=True, lr_r=0.5)
+        h = train_loop(DFedRW(model, data, topo, cfg), ROUNDS, xt, yt,
+                       eval_every=max(ROUNDS // 4, 1))
+        emit(f"fig13/dfedrw-K{k}", (time.time()-t0)/ROUNDS*1e6,
+             f"top1={max(h.test_accuracy):.4f}")
+        t0 = time.time()
+        b = FedAvg(model, data, topo, BaselineConfig(n_selected=10, local_epochs=k,
+                                                     batch_size=32, lr_r=0.5))
+        hb = train_loop(b, ROUNDS, xt, yt, eval_every=max(ROUNDS // 4, 1))
+        emit(f"fig13/fedavg-E{k}", (time.time()-t0)/ROUNDS*1e6,
+             f"top1={max(hb.test_accuracy):.4f}")
+
+    for bits in (16, 8):
+        t0 = time.time()
+        cfg = DFedRWConfig(m_chains=10, k_walk=2, batch_size=32, chain_mode=True,
+                           lr_r=0.5, quant=QuantConfig(bits=bits))
+        h = train_loop(DFedRW(model, data, topo, cfg), ROUNDS, xt, yt,
+                       eval_every=max(ROUNDS // 4, 1))
+        emit(f"fig14/qdfedrw-{bits}b", (time.time()-t0)/ROUNDS*1e6,
+             f"top1={max(h.test_accuracy):.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,20 @@
+"""Paper Fig. 3/4: test accuracy & loss vs statistical heterogeneity
+(u in {100, 50, 0} and the nonbalanced u=0 variant), 3FNN, h=0."""
+from benchmarks.common import emit, load_data, run_algo
+
+ALGOS = ["dfedrw", "fedavg", "dfedavg", "dsgd"]
+
+
+def run():
+    for u, scheme in [(100, "similarity"), (50, "similarity"), (0, "similarity"),
+                      (0, "nonbalance")]:
+        data, xt, yt = load_data(u=u, scheme=scheme)
+        tag = f"u{u}" + ("-nonbalance" if scheme == "nonbalance" else "")
+        for algo in ALGOS:
+            hist, us = run_algo(algo, data, xt, yt)
+            emit(f"fig3/{tag}/{algo}", us,
+                 f"acc={hist.test_accuracy[-1]:.4f};loss={hist.test_loss[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    run()

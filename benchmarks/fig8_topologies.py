@@ -1,0 +1,15 @@
+"""Paper Fig. 8: DFedRW across graphs (complete, E5, E3, ring) x h."""
+from benchmarks.common import emit, load_data, run_algo
+
+
+def run():
+    for u in (100, 0):
+        data, xt, yt = load_data(u=u)
+        for topo in ["complete", "expander5", "expander3", "ring"]:
+            for h in (0, 90):
+                hist, us = run_algo("dfedrw", data, xt, yt, topo_name=topo, h=h)
+                emit(f"fig8/u{u}-h{h}/{topo}", us, f"acc={hist.test_accuracy[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,16 @@
+"""Paper Fig. 9: QDFedRW vs QDFedAvg at 32/16/8 communication bits (2FNN)."""
+from benchmarks.common import emit, load_data, run_fnn2
+
+
+def run():
+    for u, h in [(100, 0), (0, 90)]:
+        data, xt, yt = load_data(u=u)
+        for bits in (32, 16, 8):
+            for algo in ("dfedrw", "dfedavg"):
+                hist, us = run_fnn2(algo, data, xt, yt, bits=bits, h=h, n_agg=20)
+                emit(f"fig9/u{u}-h{h}/{algo}-{bits}b", us,
+                     f"acc={hist.test_accuracy[-1]:.4f};busiest_mb={hist.comm_bits_busiest[-1]/8e6:.2f}")
+
+
+if __name__ == "__main__":
+    run()

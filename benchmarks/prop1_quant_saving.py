@@ -1,0 +1,54 @@
+"""Paper Proposition 1: sufficient condition for quantization to SAVE total
+communication — b < 32/rho - 64/d, where rho = T_q/T_nq is the extra-rounds
+factor the quantized run needs to reach the same target.
+
+Empirically: train DFedRW fp32 and b-bit QDFedRW to a target accuracy,
+measure rho and the realized busiest-device bits, and check both the
+condition and the actual saving agree.
+"""
+import numpy as np
+
+from benchmarks.common import emit, load_data
+from repro.core import DFedRW, DFedRWConfig, QuantConfig, make_topology, train_loop
+from repro.models import make_fnn
+
+TARGET = 0.80
+MAX_ROUNDS = int(__import__("os").environ.get("REPRO_BENCH_ROUNDS", 80)) * 3
+
+
+def _rounds_to_target(data, xt, yt, bits: int):
+    topo = make_topology("complete", data.n_clients)
+    model = make_fnn((100,))
+    cfg = DFedRWConfig(m_chains=5, k_walk=5, quant=QuantConfig(bits=bits))
+    runner = DFedRW(model, data, topo, cfg)
+    import jax
+
+    key = jax.random.PRNGKey(0)
+    state = runner.init_state(key)
+    for r in range(MAX_ROUNDS):
+        key, sub = jax.random.split(key)
+        state, _ = runner.run_round(state, sub)
+        if (r + 1) % 5 == 0:
+            acc = runner.evaluate(state, xt, yt)["accuracy"]
+            if acc >= TARGET:
+                return r + 1, state.comm_bits_busiest
+    return MAX_ROUNDS, state.comm_bits_busiest
+
+
+def run():
+    data, xt, yt = load_data(u=50)
+    d = 784 * 100 + 100 + 100 * 10 + 10  # 2FNN dimension
+    t_nq, bits_nq = _rounds_to_target(data, xt, yt, 32)
+    for b in (8, 4):
+        t_q, bits_q = _rounds_to_target(data, xt, yt, b)
+        rho = t_q / max(t_nq, 1)
+        bound = 32.0 / rho - 64.0 / d
+        saves_predicted = b < bound
+        saves_actual = bits_q < bits_nq
+        emit(f"prop1/b{b}", 0.0,
+             f"rho={rho:.3f};bound_b<{bound:.1f};predicted_saves={saves_predicted};"
+             f"actual_bits_ratio={bits_q/max(bits_nq,1):.3f};actual_saves={saves_actual}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Benchmark harness entrypoint: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+
+  PYTHONPATH=src python -m benchmarks.run                  # everything
+  PYTHONPATH=src python -m benchmarks.run fig3 fig9        # subset
+  REPRO_BENCH_ROUNDS=40 ... python -m benchmarks.run       # faster sweep
+  REPRO_BENCH_SKIP_DRYRUN=1                                # skip pod-scale
+"""
+import os
+import sys
+import time
+import traceback
+
+MODULES = [
+    "fig3_stat_heterogeneity",
+    "fig5_dirichlet",
+    "fig6_sys_heterogeneity",
+    "fig8_topologies",
+    "fig9_quant_bits",
+    "fig10_epochs",
+    "fig11_bound",
+    "fig12_comm_cost",
+    "fig13_language_model",
+    "table4_latency",
+    "prop1_quant_saving",
+    "pod_gossip_roofline",
+]
+
+
+def main() -> None:
+    sel = sys.argv[1:]
+    picked = [m for m in MODULES if not sel or any(s in m for s in sel)]
+    if os.environ.get("REPRO_BENCH_SKIP_DRYRUN"):
+        picked = [m for m in picked if m != "pod_gossip_roofline"]
+    failed = []
+    print("name,us_per_call,derived")
+    for mod in picked:
+        t0 = time.time()
+        try:
+            __import__(f"benchmarks.{mod}", fromlist=["run"]).run()
+            print(f"# {mod} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failed.append(mod)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Quickstart: DFedRW vs FedAvg on heterogeneous federated data in ~2 min.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (BaselineConfig, DFedRW, DFedRWConfig, FedAvg,
+                        StragglerModel, make_topology, train_loop)
+from repro.core.heterogeneity import partition_similarity
+from repro.data import FederatedDataset, synthetic_image_classification
+from repro.models import make_fnn
+
+
+def main():
+    # 20 devices, fully Non-IID shards (u=0), 90% stragglers -- the paper's
+    # hardest setting (Fig. 6 right columns).
+    x, y = synthetic_image_classification(n_samples=6000, seed=0, noise=2.0)
+    xt, yt = synthetic_image_classification(n_samples=800, seed=1, noise=2.0)
+    part = partition_similarity(y, 20, u_percent=0, rng=np.random.default_rng(7))
+    data = FederatedDataset.from_partition(x, y, part)
+    topo = make_topology("complete", 20)
+    model = make_fnn((100,))
+    strag = StragglerModel(h_percent=90)
+
+    print("== DFedRW (random-walk updates, straggler partial contributions)")
+    runner = DFedRW(model, data, topo,
+                    DFedRWConfig(m_chains=5, k_walk=5, straggler=strag))
+    h_rw = train_loop(runner, 60, xt, yt, eval_every=15,
+                      callback=lambda r, m, e: print(f"  round {r+1}: acc={e['accuracy']:.3f}"))
+
+    print("== FedAvg (drops stragglers)")
+    fed = FedAvg(model, data, topo,
+                 BaselineConfig(n_selected=5, local_epochs=5, straggler=strag))
+    h_fa = train_loop(fed, 60, xt, yt, eval_every=15,
+                      callback=lambda r, m, e: print(f"  round {r+1}: acc={e['accuracy']:.3f}"))
+
+    print(f"\nDFedRW  final acc: {h_rw.test_accuracy[-1]:.3f} "
+          f"(busiest device: {h_rw.comm_bits_busiest[-1]/8e6:.1f} MB)")
+    print(f"FedAvg  final acc: {h_fa.test_accuracy[-1]:.3f} "
+          f"(busiest device: {h_fa.comm_bits_busiest[-1]/8e6:.1f} MB)")
+
+
+if __name__ == "__main__":
+    main()

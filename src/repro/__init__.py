@@ -1,0 +1,6 @@
+"""DFedRW: Decentralized Federated Averaging via Random Walk — JAX framework.
+
+Subpackages: core (the paper's protocol), models, dist, kernels, data,
+optim, checkpoint, configs, launch. See README.md / DESIGN.md.
+"""
+__version__ = "1.0.0"

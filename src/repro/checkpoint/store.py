@@ -1,0 +1,74 @@
+"""Flat-npz checkpointing with pytree structure preserved by key paths.
+
+Layout: <dir>/step_<N>.npz holding one array per flattened key path plus a
+__meta__ JSON blob (step, metrics, extra). Works for any param/opt pytree
+in this repo (dicts/lists/tuples of arrays).
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+
+_SEP = "||"
+
+
+def _flatten(tree: Any) -> dict:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out[key or "__root__"] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, metrics: dict | None = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    arrays = _flatten(tree)
+    meta = {"step": int(step), "metrics": metrics or {}}
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, __meta__=np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8),
+                 **arrays)
+    os.replace(tmp, path)
+    return path
+
+
+def load_checkpoint(directory: str, template: Any, step: int | None = None) -> tuple[Any, dict]:
+    """Restore into `template`'s structure (shapes/dtypes validated)."""
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    with np.load(path) as data:
+        meta = json.loads(bytes(data["__meta__"].tobytes()).decode())
+        arrays = {k: data[k] for k in data.files if k != "__meta__"}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat:
+        key = _SEP.join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p) or "__root__"
+        arr = arrays[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, [l for _, l in zip(flat, leaves)]), meta
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(m.group(1))
+        for f in os.listdir(directory)
+        if (m := re.match(r"step_(\d+)\.npz$", f))
+    ]
+    return max(steps) if steps else None

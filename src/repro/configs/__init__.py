@@ -1,0 +1,38 @@
+"""Architecture registry: the 10 assigned architectures + the paper's own
+protocol-scale models. Each module exposes ARCH (exact assigned config) and
+SMOKE (reduced same-family variant: <=2-ish layers, d_model<=512, <=4 experts).
+
+Usage: ``from repro.configs import get_arch, get_smoke, ARCH_IDS``.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "jamba-1.5-large-398b",
+    "deepseek-v2-lite-16b",
+    "mamba2-130m",
+    "qwen2-72b",
+    "yi-6b",
+    "internvl2-1b",
+    "granite-34b",
+    "qwen2.5-32b",
+    "grok-1-314b",
+    "seamless-m4t-large-v2",
+]
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def _load(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; have {ARCH_IDS}")
+    return importlib.import_module(_MODULES[arch_id])
+
+
+def get_arch(arch_id: str):
+    return _load(arch_id).ARCH
+
+
+def get_smoke(arch_id: str):
+    return _load(arch_id).SMOKE

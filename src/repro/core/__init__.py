@@ -1,0 +1,16 @@
+"""The paper's contribution: DFedRW / QDFedRW protocol core."""
+from repro.core.graph import Topology, make_topology
+from repro.core.walk import WalkPlan, sample_walks, StragglerModel
+from repro.core.quantization import QuantConfig, Quantized, quantize, dequantize
+from repro.core.dfedrw import DFedRW, DFedRWConfig, DFedRWState
+from repro.core.baselines import BaselineConfig, FedAvg, DFedAvg, DSGD
+from repro.core.metrics import History, train_loop
+
+__all__ = [
+    "Topology", "make_topology",
+    "WalkPlan", "sample_walks", "StragglerModel",
+    "QuantConfig", "Quantized", "quantize", "dequantize",
+    "DFedRW", "DFedRWConfig", "DFedRWState",
+    "BaselineConfig", "FedAvg", "DFedAvg", "DSGD",
+    "History", "train_loop",
+]

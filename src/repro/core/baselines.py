@@ -1,0 +1,301 @@
+"""Baselines the paper compares against (§VI-B): FedAvg [33], DFedAvg [15]
+(momentum-free DFedAvgM, which DFedRW reduces to when all walk steps are
+self-loops), and DSGD.
+
+All baselines *drop stragglers* (the paper's point of contrast): under h%
+system heterogeneity, straggler devices neither update nor contribute to
+aggregation in that round.
+
+Quantized DFedAvg (QDFedAvg, Fig. 9) quantizes the aggregation diffs only
+(its walks are local, so there are no hand-off payloads).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dfedrw import DFedRWState, RoundMetrics, _stack_params
+from repro.core.graph import Topology
+from repro.core.quantization import QuantConfig, dequantize, quantize, wire_bits
+from repro.core.walk import StragglerModel
+from repro.data.synthetic import FederatedDataset
+from repro.models.fnn import SmallModel
+from repro.optim.sgd import decreasing_lr
+
+__all__ = ["BaselineConfig", "FedAvg", "DFedAvg", "DSGD"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselineConfig:
+    n_selected: int = 5            # devices (or aggregators) per round
+    local_epochs: int = 5          # E local SGD steps between aggregations
+    batch_size: int = 50
+    lr_r: float = 5.0
+    lr_q: float = 0.499
+    n_agg: int = 5                 # |N_A(i)| for decentralized baselines
+    momentum: float = 0.0          # >0: DFedAvgM [15] -- momentum applied
+                                   # during the local-epoch loop
+    straggler: StragglerModel = dataclasses.field(default_factory=StragglerModel)
+    quant: QuantConfig = dataclasses.field(default_factory=lambda: QuantConfig(bits=32))
+    seed: int = 0
+
+
+class _Base:
+    def __init__(self, model: SmallModel, data: FederatedDataset, topo: Topology, cfg: BaselineConfig):
+        self.model = model
+        self.data = data
+        self.topo = topo
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self._x = jnp.asarray(data.x)
+        self._y = jnp.asarray(data.y)
+        self._local_fn = self._build_local_fn()
+
+    def init_state(self, key: jax.Array) -> DFedRWState:
+        params = self.model.init(key)
+        return DFedRWState(
+            device_params=_stack_params(params, self.topo.n),
+            updated=np.zeros(self.topo.n, dtype=bool),
+        )
+
+    def _build_local_fn(self):
+        model = self.model
+        cfg = self.cfg
+        grad_fn = jax.grad(model.loss_fn)
+
+        @jax.jit
+        def local_updates(params_sel, batch_idx, kbar0):
+            """params_sel: (S, ...); batch_idx: (S, E, B). With
+            cfg.momentum > 0 this is DFedAvgM's local loop [15]."""
+            x, y = self._x, self._y
+            vel0 = jax.tree_util.tree_map(jnp.zeros_like, params_sel)
+
+            def body(carry, inputs):
+                p, vel = carry
+                bidx_e, step_e = inputs
+                lr = decreasing_lr(kbar0 + step_e + 1, cfg.lr_r, cfg.lr_q)
+                xb, yb = x[bidx_e], y[bidx_e]  # (S, B, ...)
+
+                def one(pp, vv, xx, yy):
+                    g = grad_fn(pp, (xx, yy))
+                    vv = jax.tree_util.tree_map(
+                        lambda v, gg: cfg.momentum * v + gg, vv, g)
+                    return jax.tree_util.tree_map(lambda a, b: a - lr * b, pp, vv)
+
+                newp = jax.vmap(one)(p, vel, xb, yb)
+                newv = jax.tree_util.tree_map(
+                    lambda np_, op, v: jnp.where(cfg.momentum > 0, (op - np_) / jnp.maximum(lr, 1e-12), v),
+                    newp, p, vel)
+                return (newp, newv), None
+
+            steps = jnp.arange(batch_idx.shape[1], dtype=jnp.int32)
+            (out, _), _ = jax.lax.scan(body, (params_sel, vel0),
+                                       (jnp.swapaxes(batch_idx, 0, 1), steps))
+            return out
+
+        return local_updates
+
+    def _select(self, drop_stragglers: bool = True) -> np.ndarray:
+        """Baselines drop any selected persistently-slow device (it cannot
+        finish E local epochs within the global clock) -- the sampling bias
+        the paper criticizes. Slow devices' data is thus never trained on."""
+        cfg = self.cfg
+        sel = self.rng.choice(self.topo.n, size=min(cfg.n_selected, self.topo.n), replace=False)
+        if drop_stragglers and cfg.straggler.h_percent > 0:
+            slow = cfg.straggler.slow_mask(self.topo.n)
+            sel = sel[~slow[sel]]
+        return np.sort(sel)
+
+    def _skip_round(self, state: DFedRWState) -> tuple[DFedRWState, RoundMetrics]:
+        """All selected devices were stragglers: the round produces no update
+        (the server/neighbors time out) -- the data-loss failure mode the
+        paper attributes to (D)FedAvg."""
+        new_state = dataclasses.replace(state, round=state.round + 1)
+        return new_state, RoundMetrics(
+            round=new_state.round,
+            train_loss=float("nan"),
+            comm_bits_round=0.0,
+            comm_bits_busiest_round=0.0,
+            gamma_hat=1.0,
+        )
+
+    def _batches(self, sel: np.ndarray, epochs: int) -> np.ndarray:
+        cfg = self.cfg
+        bidx = np.zeros((len(sel), epochs, cfg.batch_size), dtype=np.int64)
+        for si, dev in enumerate(sel):
+            row = self.data.client_idx[dev]
+            for e in range(epochs):
+                bidx[si, e] = row[self.rng.integers(0, row.shape[0], size=cfg.batch_size)]
+        return bidx
+
+    def evaluate(self, state: DFedRWState, x_test, y_test, max_batch: int = 2048) -> dict:
+        if state.updated is not None and state.updated.any():
+            sel = jnp.asarray(np.nonzero(state.updated)[0])
+            mean_params = jax.tree_util.tree_map(lambda p: jnp.mean(p[sel], axis=0), state.device_params)
+        else:
+            mean_params = jax.tree_util.tree_map(lambda p: jnp.mean(p, axis=0), state.device_params)
+        x_test = jnp.asarray(x_test[:max_batch])
+        y_test = jnp.asarray(y_test[:max_batch])
+        logits = self.model.predict(mean_params, x_test)
+        return {
+            "accuracy": float(jnp.mean(jnp.argmax(logits, -1) == y_test)),
+            "loss": float(self.model.loss_fn(mean_params, (x_test, y_test))),
+        }
+
+    def _mean_loss(self, params_sel, bidx_last) -> float:
+        xb, yb = self._x[bidx_last], self._y[bidx_last]
+        losses = jax.vmap(self.model.loss_fn)(params_sel, (xb, yb))
+        return float(jnp.mean(losses))
+
+
+class FedAvg(_Base):
+    """Centralized FedAvg [33]: the server broadcasts the global model to S
+    selected devices, which run E local epochs; weighted average back."""
+
+    def run_round(self, state: DFedRWState, key: jax.Array) -> tuple[DFedRWState, RoundMetrics]:
+        cfg = self.cfg
+        # Global model = row 0 (all rows kept in sync).
+        global_params = jax.tree_util.tree_map(lambda p: p[0], state.device_params)
+        sel = self._select()
+        if len(sel) == 0:
+            return self._skip_round(state)
+        bidx = self._batches(sel, cfg.local_epochs)
+        params_sel = jax.tree_util.tree_map(
+            lambda p: jnp.broadcast_to(p, (len(sel), *p.shape)), global_params
+        )
+        out = self._local_fn(params_sel, jnp.asarray(bidx), jnp.int32(state.global_step))
+        sizes = self.data.client_sizes[sel].astype(np.float64)
+        w = jnp.asarray((sizes / sizes.sum()).astype(np.float32))
+        new_global = jax.tree_util.tree_map(
+            lambda p: jnp.tensordot(w, p, axes=1), out
+        )
+        new_stack = _stack_params(new_global, self.topo.n)
+        all_updated = np.ones(self.topo.n, dtype=bool)
+        d = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(new_global))
+        phi = wire_bits(d, cfg.quant.bits)
+        tot = 2.0 * len(sel) * phi           # server <-> each selected device
+        busiest = tot                         # the server is the busiest node
+        new_state = DFedRWState(
+            device_params=new_stack,
+            round=state.round + 1,
+            global_step=state.global_step + cfg.local_epochs,
+            comm_bits_total=state.comm_bits_total + tot,
+            comm_bits_busiest=state.comm_bits_busiest + busiest,
+            updated=all_updated,
+        )
+        return new_state, RoundMetrics(
+            round=new_state.round,
+            train_loss=self._mean_loss(out, bidx[:, -1]),
+            comm_bits_round=tot,
+            comm_bits_busiest_round=busiest,
+            gamma_hat=1.0,
+        )
+
+
+class DFedAvg(_Base):
+    """Decentralized FedAvg (DFedAvgM without momentum, [15]): every
+    non-straggler device runs E local epochs on its *own* data, then
+    aggregates with <= n_agg random graph neighbors (Eq. 11); optionally with
+    quantized diffs (QDFedAvg, Fig. 9)."""
+
+    local_epochs_are_walks = False
+
+    def run_round(self, state: DFedRWState, key: jax.Array) -> tuple[DFedRWState, RoundMetrics]:
+        cfg = self.cfg
+        sel = self._select()
+        if len(sel) == 0:
+            return self._skip_round(state)
+        bidx = self._batches(sel, cfg.local_epochs)
+        params_sel = jax.tree_util.tree_map(lambda p: p[jnp.asarray(sel)], state.device_params)
+        out = self._local_fn(params_sel, jnp.asarray(bidx), jnp.int32(state.global_step))
+
+        # Scatter updated params back, then neighbor aggregation among sel.
+        device_params = jax.tree_util.tree_map(
+            lambda buf, upd: buf.at[jnp.asarray(sel)].set(upd), state.device_params, out
+        )
+        sizes = self.data.client_sizes
+        sel_set = set(sel.tolist())
+        rows, weights = [], []
+        for i in sel:
+            nbrs = [j for j in self.topo.neighbors(i, include_self=True) if j in sel_set]
+            self.rng.shuffle(nbrs)
+            nbrs = np.array(nbrs[: cfg.n_agg], dtype=np.int64)
+            pad = cfg.n_agg - len(nbrs)
+            w = sizes[nbrs].astype(np.float64)
+            w = w / max(w.sum(), 1.0)
+            if pad > 0:
+                nbrs = np.pad(nbrs, (0, pad), constant_values=i)
+                w = np.pad(w, (0, pad))
+            rows.append(nbrs)
+            weights.append(w)
+        agg_rows = jnp.asarray(np.stack(rows).astype(np.int32))
+        agg_w = jnp.asarray(np.stack(weights).astype(np.float32))
+        sel_j = jnp.asarray(sel)
+
+        if cfg.quant.enabled:
+            def agg_leaf(buf, start_buf, leaf_key):
+                diffs = buf[agg_rows] - start_buf[agg_rows]
+                flat = diffs.reshape((-1,) + diffs.shape[2:])
+                keys = jax.random.split(leaf_key, flat.shape[0])
+                qd = jax.vmap(lambda dd, kk: dequantize(quantize(dd, cfg.quant, kk)))(
+                    flat, keys
+                ).reshape(diffs.shape)
+                w = agg_w.reshape(agg_w.shape + (1,) * (diffs.ndim - 2))
+                upd = jnp.sum(w * qd, axis=1)
+                return buf.at[sel_j].set(start_buf[sel_j] + upd)
+
+            leaves_last, treedef = jax.tree_util.tree_flatten(device_params)
+            leaves_start = jax.tree_util.tree_leaves(state.device_params)
+            keys = jax.random.split(key, len(leaves_last))
+            new_leaves = [agg_leaf(a, b, kk) for a, b, kk in zip(leaves_last, leaves_start, keys)]
+            device_params = jax.tree_util.tree_unflatten(treedef, new_leaves)
+        else:
+            def agg_leaf(buf):
+                gathered = buf[agg_rows]
+                w = agg_w.reshape(agg_w.shape + (1,) * (gathered.ndim - 2))
+                return buf.at[sel_j].set(jnp.sum(w * gathered, axis=1))
+
+            device_params = jax.tree_util.tree_map(agg_leaf, device_params)
+
+        d = sum(int(np.prod(l.shape[1:])) for l in jax.tree_util.tree_leaves(device_params))
+        phi = wire_bits(d, cfg.quant.bits)
+        per_dev = np.zeros(self.topo.n)
+        for r, i in enumerate(sel):
+            for j, w in zip(rows[r], weights[r]):
+                if w > 0 and j != i:
+                    per_dev[j] += phi
+        tot, busiest = float(per_dev.sum()), float(per_dev.max())
+        updated = (state.updated.copy() if state.updated is not None
+                   else np.zeros(self.topo.n, dtype=bool))
+        updated[sel] = True
+        new_state = DFedRWState(
+            device_params=device_params,
+            round=state.round + 1,
+            global_step=state.global_step + cfg.local_epochs,
+            comm_bits_total=state.comm_bits_total + tot,
+            comm_bits_busiest=state.comm_bits_busiest + busiest,
+            updated=updated,
+        )
+        return new_state, RoundMetrics(
+            round=new_state.round,
+            train_loss=self._mean_loss(out, bidx[:, -1]),
+            comm_bits_round=tot,
+            comm_bits_busiest_round=busiest,
+            gamma_hat=1.0,
+        )
+
+
+class DSGD(_Base):
+    """Decentralized SGD: one local step then neighbor mixing, every round."""
+
+    def run_round(self, state: DFedRWState, key: jax.Array) -> tuple[DFedRWState, RoundMetrics]:
+        cfg = dataclasses.replace(self.cfg, local_epochs=1)
+        runner = DFedAvg.__new__(DFedAvg)
+        runner.__dict__.update(self.__dict__)
+        runner.cfg = cfg
+        return DFedAvg.run_round(runner, state, key)

@@ -1,0 +1,423 @@
+"""DFedRW and QDFedRW protocol engines (paper Alg. 1 / Alg. 2).
+
+Protocol-scale simulation: n federated clients live as a stacked pytree
+(leading axis n). Each communication round:
+
+  1. Sample M Metropolis-Hastings random-walk chains (host-side, repro.core.walk),
+     with straggler-dependent variable lengths K_m (system heterogeneity).
+  2. Each chain starts from the model of its start device (w_i^{t,0}) and
+     performs masked random-walk SGD steps (Eq. 10) across the visited
+     devices' local data, with the paper's globally decreasing step size
+     eta^kbar, kbar = (t-1)K + k.
+  3. Every visited device retains its last updated parameters w_l^{t,last}
+     (scattered back during the scan, chain order breaking ties).
+  4. A random agg_fraction of devices performs decentralized weighted
+     averaging (Eq. 11) over participating graph neighbors N_A(i).
+
+QDFedRW (Alg. 2) additionally sends stochastically quantized parameter
+*differences* on every cross-device hop (Eq. 13) and in aggregation
+(Eq. 14), with wire-cost accounting per §IV-B.
+
+The per-round inner loop is jitted once per (M, K, batch) shape; walk plans
+and data gathers are cheap host-side numpy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Topology
+from repro.core.quantization import QuantConfig, dequantize, quantize, wire_bits
+from repro.core.walk import StragglerModel, WalkPlan, sample_walks
+from repro.data.synthetic import FederatedDataset
+from repro.models.fnn import SmallModel
+from repro.optim.sgd import decreasing_lr
+
+__all__ = ["DFedRWConfig", "DFedRWState", "DFedRW", "RoundMetrics"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DFedRWConfig:
+    m_chains: int = 5
+    k_walk: int = 5
+    agg_fraction: float = 0.25      # fraction of devices aggregating per round
+    n_agg: int = 5                  # |N_A(i)| cap
+    batch_size: int = 50
+    lr_r: float = 5.0
+    lr_q: float = 0.499
+    quant: QuantConfig = dataclasses.field(default_factory=lambda: QuantConfig(bits=32))
+    straggler: StragglerModel = dataclasses.field(default_factory=StragglerModel)
+    chain_mode: bool = False        # large-scale LM mode (§VI-F): aggregate the
+                                    # M chain-end models; chains persist across rounds
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class DFedRWState:
+    device_params: Any              # pytree, leaves (n, ...)
+    round: int = 0
+    global_step: int = 0            # kbar counter
+    chain_starts: np.ndarray | None = None  # chain mode: i_m^{t,0}
+    comm_bits_total: float = 0.0
+    comm_bits_busiest: float = 0.0
+    updated: np.ndarray | None = None  # (n,) bool: device has trained/aggregated
+                                       # at least once (evaluation averages over
+                                       # these; un-touched devices still hold
+                                       # their init and are not "the model")
+
+
+@dataclasses.dataclass
+class RoundMetrics:
+    round: int
+    train_loss: float
+    comm_bits_round: float
+    comm_bits_busiest_round: float
+    gamma_hat: float
+
+
+def _stack_params(params: Any, n: int) -> Any:
+    return jax.tree_util.tree_map(lambda p: jnp.broadcast_to(p, (n, *p.shape)).copy(), params)
+
+
+class DFedRW:
+    """Runner binding (model, dataset, topology, config)."""
+
+    def __init__(
+        self,
+        model: SmallModel,
+        data: FederatedDataset,
+        topo: Topology,
+        cfg: DFedRWConfig,
+    ):
+        assert data.n_clients == topo.n, "dataset clients must match graph size"
+        self.model = model
+        self.data = data
+        self.topo = topo
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self._x = jnp.asarray(data.x)
+        self._y = jnp.asarray(data.y)
+        self._round_fn = self._build_round_fn()
+
+    # ------------------------------------------------------------------ init
+    def init_state(self, key: jax.Array) -> DFedRWState:
+        params = self.model.init(key)
+        starts = None
+        if self.cfg.chain_mode:
+            starts = self.rng.integers(0, self.topo.n, size=self.cfg.m_chains)
+        return DFedRWState(
+            device_params=_stack_params(params, self.topo.n),
+            chain_starts=starts,
+            updated=np.zeros(self.topo.n, dtype=bool),
+        )
+
+    # -------------------------------------------------------------- jit core
+    def _build_round_fn(self):
+        cfg = self.cfg
+        model = self.model
+
+        @functools.partial(jax.jit, static_argnames=())
+        def round_fn(
+            device_params,            # (n, ...)
+            walk_devices,             # (M, K) int32
+            walk_mask,                # (M, K) bool
+            batch_idx,                # (M, K, B) int64 into global data
+            agg_rows,                 # (A, n_agg) int32 neighbor ids per aggregator
+            agg_weights,              # (A, n_agg) f32 (n_l/m, zero-padded)
+            agg_devices,              # (A,) int32 aggregating device ids
+            kbar0,                    # scalar int32: global step before round
+            qkey,                     # PRNG key for quantization
+        ):
+            x, y = self._x, self._y
+            m, k = walk_devices.shape
+
+            # Chain start models: w_{i^{t,0}}.
+            chain_params = jax.tree_util.tree_map(
+                lambda p: p[walk_devices[:, 0]], device_params
+            )
+            start_params = chain_params  # for gamma-hat + aggregation diffs
+            dev_last = device_params     # w_l^{t,last} buffer
+
+            grad_fn = jax.grad(model.loss_fn)
+
+            def one_chain_step(p, xb, yb, lr):
+                g = grad_fn(p, (xb, yb))
+                return jax.tree_util.tree_map(lambda pp, gg: pp - lr * gg, p, g), g
+
+            def scan_body(carry, inputs):
+                chain_params, dev_last, qkey = carry
+                devs_k, mask_k, bidx_k, step_k = inputs
+                lr = decreasing_lr(kbar0 + step_k + 1, cfg.lr_r, cfg.lr_q)
+                xb = x[bidx_k]  # (M, B, ...)
+                yb = y[bidx_k]
+                new_params, grads = jax.vmap(one_chain_step, in_axes=(0, 0, 0, None))(
+                    chain_params, xb, yb, lr
+                )
+                # Straggler mask: inactive chains keep their params.
+                def mask_leaf(new, old):
+                    mk = mask_k.reshape((m,) + (1,) * (new.ndim - 1))
+                    return jnp.where(mk, new, old)
+
+                stepped = jax.tree_util.tree_map(mask_leaf, new_params, chain_params)
+
+                # QDFedRW: the hand-off to the next device transmits
+                # Q(w^{k+1} - w^k); the received model is w^k + deq(Q(diff)).
+                if cfg.quant.enabled:
+                    qkey, sub = jax.random.split(qkey)
+
+                    def quant_leaf(new, old, leaf_key):
+                        diff = new - old
+                        qd = dequantize(
+                            quantize(diff, cfg.quant, leaf_key), dtype=new.dtype
+                        )
+                        return old + qd
+
+                    leaves_new, treedef = jax.tree_util.tree_flatten(stepped)
+                    leaves_old = jax.tree_util.tree_leaves(chain_params)
+                    keys = jax.random.split(sub, len(leaves_new))
+                    leaves_q = [
+                        quant_leaf(ln, lo, kk)
+                        for ln, lo, kk in zip(leaves_new, leaves_old, keys)
+                    ]
+                    stepped = jax.tree_util.tree_unflatten(treedef, leaves_q)
+
+                # Scatter each (active) chain's params to its current device's
+                # w^{t,last} slot; chain order breaks ties deterministically.
+                def scatter_chain(c, buf):
+                    def set_leaf(b, cp):
+                        return jax.lax.cond(
+                            mask_k[c],
+                            lambda: b.at[devs_k[c]].set(cp[c]),
+                            lambda: b,
+                        )
+
+                    return jax.tree_util.tree_map(
+                        lambda b, cp: set_leaf(b, cp), buf, stepped
+                    )
+
+                dev_last = jax.lax.fori_loop(
+                    0, m, lambda c, buf: scatter_chain(c, buf), dev_last
+                )
+                grad_sq = sum(
+                    jnp.sum(g**2, axis=tuple(range(1, g.ndim)))
+                    for g in jax.tree_util.tree_leaves(grads)
+                )  # (M,)
+                return (stepped, dev_last, qkey), grad_sq
+
+            steps = jnp.arange(k, dtype=jnp.int32)
+            (chain_params, dev_last, qkey), grad_sq_traj = jax.lax.scan(
+                scan_body,
+                (chain_params, dev_last, qkey),
+                (walk_devices.T, walk_mask.T, jnp.swapaxes(batch_idx, 0, 1), steps),
+            )
+
+            # gamma-hat estimate (Lemma 1): ||g_last|| / ||g_first|| averaged over chains.
+            g0 = jnp.sqrt(grad_sq_traj[0] + 1e-12)
+            k_last = jnp.maximum(jnp.sum(walk_mask, axis=1) - 1, 0)  # (M,)
+            g_last = jnp.sqrt(
+                grad_sq_traj[k_last, jnp.arange(m)] + 1e-12
+            )
+            gamma_hat = jnp.mean(g_last / g0)
+
+            # Decentralized aggregation (Eq. 11 / Eq. 14).
+            if cfg.quant.enabled:
+                qkey, sub = jax.random.split(qkey)
+
+                def agg_leaf(buf, start_buf, leaf_key):
+                    diffs = buf[agg_rows] - start_buf[agg_rows]  # (A, n_agg, ...)
+                    flat = diffs.reshape((-1,) + diffs.shape[2:])
+                    keys = jax.random.split(leaf_key, flat.shape[0])
+                    qd = jax.vmap(lambda d, kk: dequantize(quantize(d, cfg.quant, kk)))(
+                        flat, keys
+                    ).reshape(diffs.shape)
+                    w = agg_weights.reshape(agg_weights.shape + (1,) * (diffs.ndim - 2))
+                    upd = jnp.sum(w * qd, axis=1)  # (A, ...)
+                    base = start_buf[agg_devices]
+                    return buf.at[agg_devices].set(base + upd)
+
+                leaves_last, treedef = jax.tree_util.tree_flatten(dev_last)
+                leaves_start = jax.tree_util.tree_leaves(device_params)
+                keys = jax.random.split(sub, len(leaves_last))
+                new_leaves = [
+                    agg_leaf(bl, bs, kk)
+                    for bl, bs, kk in zip(leaves_last, leaves_start, keys)
+                ]
+                new_device_params = jax.tree_util.tree_unflatten(treedef, new_leaves)
+            else:
+
+                def agg_leaf(buf):
+                    gathered = buf[agg_rows]  # (A, n_agg, ...)
+                    w = agg_weights.reshape(
+                        agg_weights.shape + (1,) * (gathered.ndim - 2)
+                    )
+                    avg = jnp.sum(w * gathered, axis=1)
+                    return buf.at[agg_devices].set(avg)
+
+                new_device_params = jax.tree_util.tree_map(agg_leaf, dev_last)
+
+            # Mean train loss over the round's final chain models, on their
+            # last batch (cheap monitoring signal).
+            last_x = x[batch_idx[:, -1]]
+            last_y = y[batch_idx[:, -1]]
+            losses = jax.vmap(model.loss_fn)(chain_params, (last_x, last_y))
+            return new_device_params, jnp.mean(losses), gamma_hat
+
+        return round_fn
+
+    # ------------------------------------------------------------- host side
+    def _plan_round(self, state: DFedRWState) -> tuple[WalkPlan, np.ndarray, tuple]:
+        cfg, topo, rng = self.cfg, self.topo, self.rng
+        plan = sample_walks(
+            topo,
+            cfg.m_chains,
+            cfg.k_walk,
+            rng,
+            straggler=cfg.straggler,
+            start_devices=state.chain_starts if cfg.chain_mode else None,
+        )
+        # Per-step batches from the visited device's local data. A slow device
+        # contributes a *partial* update (paper Table II row 4): it processes
+        # only batch_size/slowdown distinct samples within the global clock
+        # (realized by tiling a sub-batch, i.e. an unbiased smaller-batch
+        # gradient at unchanged shapes).
+        slow = cfg.straggler.slow_mask(topo.n)
+        b_slow = max(1, int(cfg.batch_size / max(cfg.straggler.slowdown, 1.0)))
+        bidx = np.zeros((cfg.m_chains, cfg.k_walk, cfg.batch_size), dtype=np.int64)
+        for mm in range(cfg.m_chains):
+            for kk in range(cfg.k_walk):
+                dev = plan.devices[mm, kk]
+                row = self.data.client_idx[dev]
+                if slow[dev] and cfg.straggler.mode == "partial":
+                    sub = row[rng.integers(0, row.shape[0], size=b_slow)]
+                    reps = int(np.ceil(cfg.batch_size / b_slow))
+                    bidx[mm, kk] = np.tile(sub, reps)[: cfg.batch_size]
+                else:
+                    bidx[mm, kk] = row[rng.integers(0, row.shape[0], size=cfg.batch_size)]
+
+        # Aggregation plan.
+        participants = np.unique(plan.devices[plan.mask])
+        sizes = self.data.client_sizes
+        if cfg.chain_mode:
+            # §VI-F: N_A(i) = the other chains' end devices; aggregators are
+            # exactly the chain-end devices.
+            agg_devices = np.unique(plan.last_device)
+            rows, weights = [], []
+            for i in agg_devices:
+                nbrs = plan.last_device
+                w = sizes[nbrs].astype(np.float64)
+                rows.append(nbrs)
+                weights.append(w / w.sum())
+            n_agg = len(plan.last_device)
+        else:
+            n_aggregators = max(1, int(round(topo.n * cfg.agg_fraction)))
+            agg_devices = rng.choice(topo.n, size=n_aggregators, replace=False)
+            n_agg = cfg.n_agg
+            rows, weights = [], []
+            part_set = set(participants.tolist())
+            for i in agg_devices:
+                nbrs = [j for j in self.topo.neighbors(i, include_self=True)
+                        if j in part_set or j == i]
+                rng.shuffle(nbrs)
+                nbrs = np.array(nbrs[:n_agg], dtype=np.int64)
+                pad = n_agg - len(nbrs)
+                w = sizes[nbrs].astype(np.float64)
+                w = w / max(w.sum(), 1.0)
+                if pad > 0:
+                    nbrs = np.pad(nbrs, (0, pad), constant_values=i)
+                    w = np.pad(w, (0, pad))
+                rows.append(nbrs)
+                weights.append(w)
+        agg_rows = np.stack(rows).astype(np.int32)
+        agg_w = np.stack(weights).astype(np.float32)
+        return plan, bidx, (agg_devices.astype(np.int32), agg_rows, agg_w)
+
+    def _comm_cost_bits(self, plan: WalkPlan, agg: tuple, d_params: int) -> tuple[float, float]:
+        """Eq. 18 comm accounting. Returns (total_bits, busiest_device_bits)."""
+        bits = self.cfg.quant.bits
+        per_dev = np.zeros(self.topo.n)
+        hop_bits = wire_bits(d_params, bits)
+        # Walk hand-offs: each cross-device hop sends params (or quantized diff).
+        for mm in range(plan.m):
+            kk = int(plan.k_m[mm])
+            for step in range(kk - 1):
+                a, b = plan.devices[mm, step], plan.devices[mm, step + 1]
+                if a != b:
+                    per_dev[a] += hop_bits       # sender pays (send side)
+        # Aggregation: each participating device l sends its (quantized diff)
+        # model to the aggregators that list it.
+        agg_devices, agg_rows, agg_w = agg
+        for r, i in enumerate(agg_devices):
+            for j, w in zip(agg_rows[r], agg_w[r]):
+                if w > 0 and j != i:
+                    per_dev[j] += hop_bits
+        return float(per_dev.sum()), float(per_dev.max())
+
+    # ------------------------------------------------------------------- run
+    def run_round(self, state: DFedRWState, key: jax.Array) -> tuple[DFedRWState, RoundMetrics]:
+        cfg = self.cfg
+        plan, bidx, agg = self._plan_round(state)
+        agg_devices, agg_rows, agg_w = agg
+        new_params, loss, gamma_hat = self._round_fn(
+            state.device_params,
+            jnp.asarray(plan.devices),
+            jnp.asarray(plan.mask),
+            jnp.asarray(bidx),
+            jnp.asarray(agg_rows),
+            jnp.asarray(agg_w),
+            jnp.asarray(agg_devices),
+            jnp.int32(state.global_step),
+            key,
+        )
+        d_params = sum(
+            int(np.prod(l.shape[1:]))
+            for l in jax.tree_util.tree_leaves(state.device_params)
+        )
+        tot, busiest = self._comm_cost_bits(plan, agg, d_params)
+        updated = (state.updated.copy() if state.updated is not None
+                   else np.zeros(self.topo.n, dtype=bool))
+        updated[np.unique(plan.devices[plan.mask])] = True
+        updated[agg_devices] = True
+        new_state = DFedRWState(
+            device_params=new_params,
+            round=state.round + 1,
+            global_step=state.global_step + cfg.k_walk,
+            chain_starts=plan.last_device if cfg.chain_mode else None,
+            comm_bits_total=state.comm_bits_total + tot,
+            comm_bits_busiest=state.comm_bits_busiest + busiest,
+            updated=updated,
+        )
+        metrics = RoundMetrics(
+            round=new_state.round,
+            train_loss=float(loss),
+            comm_bits_round=tot,
+            comm_bits_busiest_round=busiest,
+            gamma_hat=float(gamma_hat),
+        )
+        return new_state, metrics
+
+    # ------------------------------------------------------------- evaluate
+    def evaluate(self, state: DFedRWState, x_test, y_test, max_batch: int = 2048) -> dict:
+        """Accuracy/loss of the average over *participating* device models
+        (the paper evaluates the learned global model on the IID test set;
+        devices that never trained/aggregated still hold their random init
+        and are not part of the learned model)."""
+        if state.updated is not None and state.updated.any():
+            sel = jnp.asarray(np.nonzero(state.updated)[0])
+            mean_params = jax.tree_util.tree_map(
+                lambda p: jnp.mean(p[sel], axis=0), state.device_params
+            )
+        else:
+            mean_params = jax.tree_util.tree_map(
+                lambda p: jnp.mean(p, axis=0), state.device_params
+            )
+        x_test = jnp.asarray(x_test[:max_batch])
+        y_test = jnp.asarray(y_test[:max_batch])
+        logits = self.model.predict(mean_params, x_test)
+        acc = jnp.mean(jnp.argmax(logits, -1) == y_test)
+        loss = self.model.loss_fn(mean_params, (x_test, y_test))
+        return {"accuracy": float(acc), "loss": float(loss)}

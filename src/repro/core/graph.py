@@ -1,0 +1,179 @@
+"""Communication graphs for decentralized FL (paper §III-A, §III-D).
+
+Implements the undirected device graph G = (V, E) with self-loops, the
+Metropolis-Hastings transition matrix (Eq. 7), its spectral quantity
+lambda_P (Definition 4), and the mixing-time bound (Lemma 2).
+
+Topologies mirror §VI-C: complete, ring, and c-regular expander graphs.
+All matrices are plain numpy (host-side protocol state); only the sampled
+walk indices enter jitted computation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import numpy as np
+
+__all__ = [
+    "Topology",
+    "complete_graph",
+    "ring_graph",
+    "expander_graph",
+    "star_graph",
+    "erdos_renyi_graph",
+    "metropolis_hastings_matrix",
+    "lambda_p",
+    "mixing_time",
+    "make_topology",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A device communication graph plus its random-walk transition matrix."""
+
+    name: str
+    adjacency: np.ndarray          # (n, n) bool, symmetric, self-loops on diag
+    transition: np.ndarray         # (n, n) MH transition matrix P (Eq. 7)
+    lambda_p: float                # Definition 4
+    n: int
+
+    def neighbors(self, i: int, include_self: bool = False) -> np.ndarray:
+        row = self.adjacency[i].copy()
+        if not include_self:
+            row[i] = False
+        return np.nonzero(row)[0]
+
+    def degree(self, i: int) -> int:
+        # Degree excludes the self-loop, matching deg(i) in Eq. 7.
+        return int(self.adjacency[i].sum()) - 1
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return self.adjacency.sum(axis=1) - 1
+
+
+def _with_self_loops(adj: np.ndarray) -> np.ndarray:
+    adj = adj.astype(bool)
+    adj |= adj.T
+    np.fill_diagonal(adj, True)
+    return adj
+
+
+def complete_graph(n: int) -> np.ndarray:
+    return _with_self_loops(np.ones((n, n), dtype=bool))
+
+
+def ring_graph(n: int) -> np.ndarray:
+    adj = np.zeros((n, n), dtype=bool)
+    idx = np.arange(n)
+    adj[idx, (idx + 1) % n] = True
+    adj[idx, (idx - 1) % n] = True
+    return _with_self_loops(adj)
+
+
+def expander_graph(n: int, c: int, seed: int = 0) -> np.ndarray:
+    """c-regular expander built from c/2 random circulant shifts (c even) or
+    union of random perfect matchings (c odd), per [42]'s construction style.
+
+    Deterministic given (n, c, seed)."""
+    rng = np.random.default_rng(seed)
+    adj = np.zeros((n, n), dtype=bool)
+    idx = np.arange(n)
+    # Start from a ring to guarantee connectivity, then add random shifts.
+    adj[idx, (idx + 1) % n] = True
+    shifts_needed = max(0, (c - 2 + 1) // 2)
+    used = {1, n - 1}
+    for _ in range(shifts_needed):
+        choices = [s for s in range(2, n - 1) if s not in used]
+        if not choices:
+            break
+        s = int(rng.choice(choices))
+        used.add(s)
+        used.add(n - s)
+        adj[idx, (idx + s) % n] = True
+    return _with_self_loops(adj)
+
+
+def star_graph(n: int) -> np.ndarray:
+    """Centralized topology (FedAvg's implicit graph) — for baselines."""
+    adj = np.zeros((n, n), dtype=bool)
+    adj[0, :] = True
+    adj[:, 0] = True
+    return _with_self_loops(adj)
+
+
+def erdos_renyi_graph(n: int, p: float, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    adj = rng.random((n, n)) < p
+    adj = np.triu(adj, 1)
+    # Ensure connectivity via a ring backbone.
+    idx = np.arange(n)
+    adj[idx, (idx + 1) % n] = True
+    return _with_self_loops(adj)
+
+
+def metropolis_hastings_matrix(adjacency: np.ndarray, lazy: float = 0.1) -> np.ndarray:
+    """Eq. 7: MH transition matrix with acceptance a(i,j)=min{1, deg(i)/deg(j)}.
+
+    Candidate j is proposed uniformly among deg(i) neighbors; acceptance is
+    min{1, deg(i)/deg(j)}, i.e. P(i,j) = min{1/deg(i), 1/deg(j)} for j != i,
+    which makes P symmetric and doubly stochastic => uniform stationary
+    distribution pi* = 1/n (the paper's target).
+
+    `lazy` mixes in an identity component P <- (1-lazy) P + lazy I. Pure MH
+    on an even ring is periodic (|lambda_n| = 1), violating the paper's
+    Assumption 3 (aperiodicity); the graph's self-loops (paper §III-A
+    "devices allow self-loops") realize exactly this laziness."""
+    adj = adjacency.astype(bool)
+    n = adj.shape[0]
+    deg = adj.sum(axis=1) - 1  # exclude self-loop
+    P = np.zeros((n, n), dtype=np.float64)
+    for i in range(n):
+        nbrs = np.nonzero(adj[i])[0]
+        nbrs = nbrs[nbrs != i]
+        for j in nbrs:
+            P[i, j] = min(1.0 / max(deg[i], 1), 1.0 / max(deg[j], 1))
+        P[i, i] = 1.0 - P[i].sum()
+    if lazy > 0.0:
+        P = (1.0 - lazy) * P + lazy * np.eye(n)
+    assert np.all(P >= -1e-12), "MH matrix has negative entries"
+    assert np.allclose(P.sum(axis=1), 1.0), "MH matrix rows must sum to 1"
+    return P
+
+
+def lambda_p(P: np.ndarray) -> float:
+    """Definition 4: lambda_P = (max{|lambda_2|, |lambda_n|} + 1) / 2."""
+    eigs = np.linalg.eigvals(P)
+    eigs = np.sort(np.abs(eigs))[::-1]
+    # eigs[0] ~ 1 (Perron); second largest magnitude drives mixing.
+    second = eigs[1] if len(eigs) > 1 else 0.0
+    return float((second + 1.0) / 2.0)
+
+
+def mixing_time(P: np.ndarray, zeta: float = 1.0, eps: float = 1e-2) -> int:
+    """Smallest tau with zeta * lambda_P^tau <= eps (Lemma 2 bound)."""
+    lp = lambda_p(P)
+    if lp <= 0.0:
+        return 1
+    tau = int(np.ceil(np.log(eps / zeta) / np.log(lp)))
+    return max(tau, 1)
+
+
+_BUILDERS = {
+    "complete": lambda n, **kw: complete_graph(n),
+    "ring": lambda n, **kw: ring_graph(n),
+    "expander3": lambda n, **kw: expander_graph(n, 3, seed=kw.get("seed", 0)),
+    "expander5": lambda n, **kw: expander_graph(n, 5, seed=kw.get("seed", 0)),
+    "star": lambda n, **kw: star_graph(n),
+    "erdos_renyi": lambda n, **kw: erdos_renyi_graph(
+        n, kw.get("p", 0.3), seed=kw.get("seed", 0)
+    ),
+}
+
+
+def make_topology(name: str, n: int, **kwargs) -> Topology:
+    if name not in _BUILDERS:
+        raise ValueError(f"unknown topology {name!r}; have {sorted(_BUILDERS)}")
+    adj = _BUILDERS[name](n, **kwargs)
+    P = metropolis_hastings_matrix(adj)
+    return Topology(name=name, adjacency=adj, transition=P, lambda_p=lambda_p(P), n=n)

@@ -1,0 +1,136 @@
+"""Random-walk trajectory machinery (paper §III-D, Alg. 1 lines 3-9).
+
+Samples M parallel Metropolis-Hastings random-walk chains over the device
+graph and models system heterogeneity as variable chain lengths K_m
+(the paper's straggler-tolerant partial walks, §VI-A "system heterogeneity").
+
+Walk sampling is host-side numpy (it is protocol state, a few ints per
+round); the resulting index arrays are fed to jitted training steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import numpy as np
+
+from repro.core.graph import Topology
+
+__all__ = ["WalkPlan", "sample_walks", "StragglerModel", "gamma_inexactness"]
+
+
+@dataclasses.dataclass(frozen=True)
+class WalkPlan:
+    """One communication round's worth of random-walk trajectories.
+
+    devices: (M, K_max) int32 — device visited at step k of chain m.
+    mask:    (M, K_max) bool  — True where the chain is still active
+                                 (chain m performs K_m <= K_max steps).
+    k_m:     (M,) int32       — realized per-chain walk lengths.
+    last_device: (M,) int32   — device holding w^{t,last} of each chain.
+    """
+
+    devices: np.ndarray
+    mask: np.ndarray
+    k_m: np.ndarray
+
+    @property
+    def last_device(self) -> np.ndarray:
+        idx = np.maximum(self.k_m - 1, 0)
+        return self.devices[np.arange(self.devices.shape[0]), idx]
+
+    @property
+    def m(self) -> int:
+        return self.devices.shape[0]
+
+    @property
+    def k_max(self) -> int:
+        return self.devices.shape[1]
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerModel:
+    """System heterogeneity h% (paper §III-C, §VI-A): a FIXED h% of devices
+    are persistently slow (hardware/battery/network capability), with epoch
+    cost `slowdown`x a fast device's. A global clock budgets each round at
+    K fast-epochs; a random-walk chain stops when its cumulative cost along
+    the visited devices exceeds the budget -- the paper's variable K_m
+    partial walks. Baselines instead *drop* any selected slow device (it
+    cannot finish E local epochs inside the clock), which is exactly the
+    sampling bias the paper criticizes.
+
+    gamma-inexactness view (Def. 2 / Lemma 1): a slow device has larger
+    gamma_i, so chains through slow devices realize fewer effective updates.
+    """
+
+    h_percent: float = 0.0
+    slowdown: float = 5.0
+    seed: int = 1234
+    mode: str = "partial"  # "partial": slow devices do 1/slowdown of the batch
+                           #            within the clock (paper: "integrating
+                           #            partial contributions from stragglers")
+                           # "truncate": budget-based variable K_m chains
+
+    def slow_mask(self, n: int) -> np.ndarray:
+        """Deterministic fixed slow-device set."""
+        n_slow = int(round(n * self.h_percent / 100.0))
+        mask = np.zeros(n, dtype=bool)
+        if n_slow > 0:
+            rng = np.random.default_rng(self.seed)
+            mask[rng.choice(n, size=n_slow, replace=False)] = True
+        return mask
+
+    def chain_lengths(self, devices: np.ndarray, k: int, n: int) -> np.ndarray:
+        """K_m per chain: steps completable within a budget of k fast-epochs,
+        where steps on slow devices cost `slowdown`."""
+        m = devices.shape[0]
+        if self.h_percent <= 0 or self.mode == "partial":
+            return np.full(m, k, dtype=np.int32)
+        slow = self.slow_mask(n)
+        cost = np.where(slow[devices], self.slowdown, 1.0)  # (M, K)
+        cum = np.cumsum(cost, axis=1)
+        k_m = (cum <= float(k)).sum(axis=1).astype(np.int32)
+        return np.maximum(k_m, 1)  # every chain contributes at least one step
+
+
+def sample_walks(
+    topo: Topology,
+    m: int,
+    k: int,
+    rng: np.random.Generator,
+    straggler: StragglerModel | None = None,
+    start_devices: np.ndarray | None = None,
+) -> WalkPlan:
+    """Sample M MH random-walk chains of (variable) length <= K.
+
+    Start devices are uniform over V (Alg. 1 line 3) unless given (the
+    large-scale LM experiment chains rounds: i_m^{t,0} = i_m^{t-1,last})."""
+    if start_devices is None:
+        start = rng.integers(0, topo.n, size=m)
+    else:
+        start = np.asarray(start_devices, dtype=np.int64) % topo.n
+    devices = np.zeros((m, k), dtype=np.int32)
+    P = topo.transition
+    n = topo.n
+    cdf = np.cumsum(P, axis=1)
+    for c in range(m):
+        cur = int(start[c])
+        for step in range(k):
+            devices[c, step] = cur
+            # Inverse-CDF sample of the MH kernel row (includes self-loop mass).
+            u = rng.random()
+            cur = int(np.searchsorted(cdf[cur], u, side="right"))
+            cur = min(cur, n - 1)
+    k_m = (
+        straggler.chain_lengths(devices, k, topo.n)
+        if straggler is not None
+        else np.full(m, k, dtype=np.int32)
+    )
+    mask = np.arange(k)[None, :] < k_m[:, None]
+    return WalkPlan(devices=devices, mask=mask, k_m=k_m)
+
+
+def gamma_inexactness(grad_norm_end: float, grad_norm_start: float) -> float:
+    """Empirical gamma-hat of Lemma 1: ||∇F(w^k)|| / ||∇F(w^{k-K})||, the
+    realized inexactness of one random-walk trajectory."""
+    if grad_norm_start <= 0.0:
+        return 1.0
+    return float(grad_norm_end / grad_norm_start)

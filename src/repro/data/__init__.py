@@ -1,0 +1,11 @@
+from repro.data.synthetic import (
+    synthetic_image_classification,
+    synthetic_token_stream,
+    FederatedDataset,
+)
+
+__all__ = [
+    "synthetic_image_classification",
+    "synthetic_token_stream",
+    "FederatedDataset",
+]

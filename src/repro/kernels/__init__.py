@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot-spots, each with a
+jitted ops.py wrapper and a pure-jnp ref.py oracle (validated in interpret
+mode on CPU; see tests/test_kernels_*.py):
+
+- quantize/:   fused stochastic quantization (paper Eq. 12 wire format) --
+               the communication hot-spot of QDFedRW.
+- ssd_scan/:   Mamba2 SSD chunked scan (sequential-grid VMEM state) -- the
+               SSM archs' training hot-spot.
+- block_attn/: blockwise flash-style causal attention (never materializes
+               the L x L score tensor) -- targets the §Roofline prefill
+               memory term.
+"""

@@ -1,0 +1,4 @@
+from repro.kernels.block_attn.ops import block_attention
+from repro.kernels.block_attn import ref
+
+__all__ = ["block_attention", "ref"]

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: blockwise (flash-style) causal attention.
+
+§Roofline shows prefill_32k memory-dominated by the materialized (L x L)
+score tensor (e.g. qwen2.5-32b: 4.6e13 bytes/chip). This kernel never
+materializes it: the KV axis is the innermost *sequential* grid dimension,
+and the running max / normalizer / output accumulator live in VMEM scratch
+across grid steps (the TPU-native equivalent of FlashAttention's
+SRAM-resident softmax state -- no shared-memory banking or warp shuffles to
+port; the sequential grid + scratch persistence IS the TPU idiom,
+cf. DESIGN.md §2 hardware-adaptation notes).
+
+Grid: (batch*heads, Lq/BQ, Lk/BK), BK innermost. Blocks: q (BQ, hd),
+k/v (BK, hd); scratch: m (BQ,), l (BQ,), acc (BQ, hd) f32.
+Causal masking skips fully-masked KV blocks via pl.when.
+VMEM/step ~ (BQ+2BK)*hd*4 + BQ*BK*4: BQ=BK=256, hd=128 -> ~0.7 MiB.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["block_attention_call"]
+
+_NEG = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                 *, bq: int, bk: int, scale: float, causal: bool, nk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    # Skip blocks strictly above the diagonal (causal).
+    run = (not causal) or (k_start <= q_start + bq - 1)
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)          # (BQ, hd)
+        k = k_ref[0].astype(jnp.float32)          # (BK, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (BQ, BK)
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, _NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(p, v)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def block_attention_call(q, k, v, *, bq: int = 256, bk: int = 256,
+                         causal: bool = True, interpret: bool = False):
+    """q/k/v (BH, L, hd) -> o (BH, L, hd). L % bq == L % bk == 0 (ops pads)."""
+    bh, lq, hd = q.shape
+    lk = k.shape[1]
+    assert lq % bq == 0 and lk % bk == 0, (lq, bq, lk, bk)
+    nk = lk // bk
+    scale = 1.0 / math.sqrt(hd)
+    grid = (bh, lq // bq, nk)
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, bq=bq, bk=bk, scale=scale,
+                          causal=causal, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, lq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,40 @@
+"""Jitted wrapper for blockwise attention: handles (B, L, H, hd) layout,
+GQA head repetition, and padding to block multiples."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.block_attn.block_attn import block_attention_call
+
+__all__ = ["block_attention"]
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "causal", "interpret"))
+def block_attention(q, k, v, *, bq: int = 256, bk: int = 256, causal: bool = True,
+                    interpret: bool = True):
+    """q (B, Lq, H, hd), k/v (B, Lk, KV, hd) with H % KV == 0.
+    Returns (B, Lq, H, hd). Padding keys are masked out by the causal mask
+    for self-attention (Lq == Lk); for cross-attention pass causal=False and
+    pre-pad yourself."""
+    b, lq, h, hd = q.shape
+    lk, kv = k.shape[1], k.shape[2]
+    if kv != h:
+        rep = h // kv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qt = q.transpose(0, 2, 1, 3).reshape(b * h, lq, hd)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * h, lk, hd)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * h, lk, hd)
+    pq = (-lq) % bq
+    pk = (-lk) % bk
+    if pq or pk:
+        qt = jnp.pad(qt, ((0, 0), (0, pq), (0, 0)))
+        kt = jnp.pad(kt, ((0, 0), (0, pk), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, pk), (0, 0)))
+    o = block_attention_call(qt, kt, vt, bq=bq, bk=bk, causal=causal,
+                             interpret=interpret)
+    o = o[:, :lq, :]
+    return o.reshape(b, h, lq, hd).transpose(0, 2, 1, 3)

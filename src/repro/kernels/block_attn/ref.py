@@ -1,0 +1,24 @@
+"""Oracle for the blockwise-attention kernel: plain materialized softmax
+attention in f32."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q/k/v (BH, L, hd) -> (BH, L, hd)."""
+    bh, lq, hd = q.shape
+    lk = k.shape[1]
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    if causal:
+        i = jnp.arange(lq)[:, None]
+        j = jnp.arange(lk)[None, :]
+        s = jnp.where(j <= i, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", w, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.quantize.ops import stochastic_quantize, stochastic_dequantize
+from repro.kernels.quantize import ref
+
+__all__ = ["stochastic_quantize", "stochastic_dequantize", "ref"]

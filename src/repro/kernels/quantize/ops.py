@@ -1,0 +1,51 @@
+"""Jitted public wrappers around the stochastic-quantization Pallas kernel.
+
+Handles arbitrary input shapes: flatten -> pad to (k*ROW_TILE, 128) ->
+kernel -> unpad/reshape. `interpret=True` runs the kernel body in Python on
+CPU (this container); on TPU it compiles to a fused VMEM pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quantize.quantize import (
+    LANES,
+    ROW_TILE,
+    dequantize_kernel_call,
+    quantize_kernel_call,
+)
+
+__all__ = ["stochastic_quantize", "stochastic_dequantize"]
+
+_TILE = ROW_TILE * LANES
+
+
+def _pad2d(flat: jax.Array) -> jax.Array:
+    n = flat.shape[0]
+    pad = (-n) % _TILE
+    return jnp.pad(flat, (0, pad)).reshape(-1, LANES)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "bits", "interpret"))
+def stochastic_quantize(w: jax.Array, key: jax.Array, *, s: float, bits: int = 8,
+                        interpret: bool = True):
+    """Quantize tensor w -> (int8 indices, norm). The wire format is
+    (indices, s, norm): 64 + bits*d bits (paper §IV-B)."""
+    flat = w.reshape(-1).astype(jnp.float32)
+    norm = jnp.linalg.norm(flat)
+    u = jax.random.uniform(key, flat.shape, dtype=jnp.float32)
+    q2d = quantize_kernel_call(_pad2d(flat), _pad2d(u), norm, s=s, bits=bits,
+                               interpret=interpret)
+    return q2d.reshape(-1)[: flat.shape[0]].reshape(w.shape), norm
+
+
+@functools.partial(jax.jit, static_argnames=("s", "out_dtype", "interpret"))
+def stochastic_dequantize(q: jax.Array, norm: jax.Array, *, s: float,
+                          out_dtype=jnp.float32, interpret: bool = True):
+    flat = q.reshape(-1)
+    out2d = dequantize_kernel_call(_pad2d(flat).astype(jnp.int8), norm, s=s,
+                                   out_dtype=out_dtype, interpret=interpret)
+    return out2d.reshape(-1)[: flat.shape[0]].reshape(q.shape)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the stochastic quantization kernel (Eq. 12).
+
+Bit-exact with quantize.py given the same uniforms, and statistically
+identical to repro.core.quantization.quantize (which draws its own
+uniforms from the same construction).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_ref", "dequantize_ref"]
+
+
+def quantize_ref(w: jax.Array, u: jax.Array, norm: jax.Array, *, s: float, bits: int) -> jax.Array:
+    levels = (1 << (bits - 1)) - 1
+    wf = w.astype(jnp.float32)
+    safe = jnp.where(norm > 0.0, norm, 1.0)
+    x = jnp.abs(wf) / safe
+    ell = jnp.floor(x / s)
+    phi = x / s - ell
+    idx = jnp.clip(ell + (u < phi).astype(jnp.float32), 0.0, float(levels))
+    return (idx * jnp.sign(wf)).astype(jnp.int8)
+
+
+def dequantize_ref(q: jax.Array, norm: jax.Array, *, s: float, out_dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * s * norm).astype(out_dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.ssd_scan.ops import ssd_chunked
+from repro.kernels.ssd_scan import ref
+
+__all__ = ["ssd_chunked", "ref"]

@@ -1,0 +1,53 @@
+"""Oracles for the SSD Pallas kernel.
+
+- `ssd_sequential_ref`: the literal SSM recurrence h_t = a_t h_{t-1} + b_t
+  dt_t x_t, y_t = c_t h_t -- slow but indisputable.
+- `ssd_chunked_jnp`: the chunked pure-jnp formulation shared with the model
+  path (repro.models.layers.ssd_chunked_ref), re-exported here so the
+  kernel tests can check kernel == chunked == sequential.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ssd_chunked_ref as _model_chunked
+
+__all__ = ["ssd_sequential_ref", "ssd_chunked_jnp"]
+
+
+def ssd_sequential_ref(x, dt, a_log, b, c):
+    """x (B,H,L,P), dt (B,H,L), a_log (H,), b/c (B,H,L,N) -> y (B,H,L,P)."""
+    bsz, h, l, p = x.shape
+    n = b.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (H,)
+
+    def step(state, inputs):
+        xt, dtt, bt, ct = inputs  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        alpha = jnp.exp(dtt * a[None, :])     # (B,H)
+        state = state * alpha[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", bt, xt * dtt[..., None]
+        )
+        y = jnp.einsum("bhnp,bhn->bhp", state, ct)
+        return state, y
+
+    s0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 2, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 2, 0),
+        jnp.moveaxis(b.astype(jnp.float32), 2, 0),
+        jnp.moveaxis(c.astype(jnp.float32), 2, 0),
+    )
+    _, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(x.dtype)  # (B,H,L,P)
+
+
+def ssd_chunked_jnp(x, dt, a_log, b, c, chunk: int):
+    """Adapter to the model-path chunked implementation (which uses
+    (B,L,H,P) layout and per-group B/C)."""
+    xh = jnp.moveaxis(x, 1, 2)      # (B,L,H,P)
+    dtl = jnp.moveaxis(dt, 1, 2)    # (B,L,H)
+    bb = jnp.moveaxis(b, 1, 2)      # (B,L,H,N) -- groups == heads here
+    cc = jnp.moveaxis(c, 1, 2)
+    y, _ = _model_chunked(xh, dtl, a_log, bb, cc, chunk)
+    return jnp.moveaxis(y, 1, 2)

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan (arXiv:2405.21060, Alg. 1).
+
+The SSM archs' training hot-spot. The state-space-duality algorithm splits
+the sequence into chunks; within a chunk the recurrence is a (C x C)
+masked-attention MXU matmul, across chunks an O(1)-state recurrence.
+
+TPU adaptation (DESIGN.md §2): the CUDA reference keeps per-warp states in
+registers and relies on warp shuffles for the inter-chunk scan; on TPU we
+instead exploit Pallas' *sequential grid*: the chunk axis is the innermost
+grid dimension, and the running state (P x N per head) lives in a VMEM
+scratch buffer that persists across grid steps -- the MXU does the three
+chunk matmuls (C.B^T masked, scores.X, C.state) back-to-back while the
+state never leaves VMEM.
+
+Grid: (batch, heads, n_chunks). Blocks per step (chunk=C, head dim P,
+state N): x (C,P), dt (1,C), B/C (C,N) -> y (C,P); scratch state (P,N) f32.
+VMEM/step ~ C*(P+2N)*4B + C^2*4B: C=256, P=64, N=128 -> ~0.6 MiB. All
+matmul dims are multiples of 64/128 (MXU-aligned).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan_call"]
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)        # (C, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)      # (C,)
+    a = a_ref[0, 0]                             # scalar A_log for this head
+    b = b_ref[0, 0].astype(jnp.float32)        # (C, N)
+    c = c_ref[0, 0].astype(jnp.float32)        # (C, N)
+
+    dta = dt * (-jnp.exp(a))                   # (C,) log-decay per step
+    cum = jnp.cumsum(dta)                      # inclusive
+    xdt = x * dt[:, None]
+
+    # Intra-chunk: masked decay matrix L[i,j] = exp(cum_i - cum_j), j <= i.
+    cdim = x.shape[0]
+    li = jax.lax.broadcasted_iota(jnp.int32, (cdim, cdim), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (cdim, cdim), 1)
+    lmat = jnp.where(lj <= li, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())))  # (C, C)
+    y = jax.lax.dot(scores * lmat, xdt)                           # (C, P)
+
+    # Inter-chunk: y += C_i * exp(cum_i) * S_in ; S_out = exp(cum_C) S_in + dS
+    s_in = state_ref[...]                       # (N, P) f32
+    y = y + (c * jnp.exp(cum)[:, None]) @ s_in
+    decay_to_end = jnp.exp(cum[-1] - cum)       # (C,)
+    ds = jax.lax.dot_general(b * decay_to_end[:, None], xdt,
+                             (((0,), (0,)), ((), ())))  # (N, P)
+    state_ref[...] = jnp.exp(cum[-1]) * s_in + ds
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_call(x, dt, a_log, b, c, *, chunk: int, interpret: bool = False):
+    """x (B,H,L,P), dt (B,H,L) post-softplus, a_log (H,), b/c (B,H,L,N)
+    (pre-broadcast to heads). Returns y (B,H,L,P)."""
+    bsz, h, l, p = x.shape
+    n = b.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    grid = (bsz, h, nc)
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, nc=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda i, j, k: (i, j, k, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda i, j, k: (i, j, k)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, 1, chunk, n), lambda i, j, k: (i, j, k, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda i, j, k: (i, j, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p), lambda i, j, k: (i, j, k, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, l, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a_log.reshape(1, h), b, c)

@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+TPU v5e target: 256 chips/pod as a (data=16, model=16) mesh; the multi-pod
+configuration adds a leading "pod" axis (2 pods = 512 chips). The "pod"
+axis is where the DFedRW gossip technique operates (each pod = one
+federated client group); "data" is batch/fsdp parallelism; "model" is
+tensor/expert parallelism.
+
+NOTE: defined as functions (never module-level constants) so importing this
+module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh", "HW"]
+
+
+class HW:
+    """TPU v5e hardware constants used by the roofline analysis."""
+
+    PEAK_FLOPS_BF16 = 197e12       # per chip
+    HBM_BW = 819e9                 # bytes/s per chip
+    ICI_BW = 50e9                  # bytes/s per link (~4 links/chip on v5e 2D torus)
+    ICI_LINKS = 4
+    HBM_BYTES = 16e9               # v5e HBM capacity
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over the host's real devices (smoke tests / examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    return jax.make_mesh((data, 1), ("data", "model"))

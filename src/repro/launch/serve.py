@@ -1,0 +1,74 @@
+"""Serving launcher: batched autoregressive decode with the KV-cache path.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b --smoke \
+      --batch 8 --prompt-len 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch, get_smoke
+    from repro.models import transformer as T
+    from repro.models.transformer import _run_encoder
+
+    cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key, jnp.float32)
+    b = args.batch
+    max_len = args.prompt_len + args.gen
+    cache = T.init_cache(cfg, b, max_len, jnp.float32,
+                         enc_len=cfg.frontend_tokens if cfg.enc_dec else 0)
+    if cfg.enc_dec:
+        embeds = jax.random.normal(key, (b, cfg.frontend_tokens, cfg.d_model), jnp.float32)
+        cache["enc_out"] = _run_encoder(cfg, params, embeds, remat=False)
+
+    prompts = np.random.default_rng(0).integers(0, cfg.vocab, size=(b, args.prompt_len))
+    step = jax.jit(lambda p, c, t: T.decode_step(cfg, p, c, t))
+
+    # Prefill via the decode path (one token at a time keeps one code path;
+    # a fused prefill kernel is the production variant -- see dryrun prefill).
+    t0 = time.time()
+    logits = None
+    for t in range(args.prompt_len):
+        logits, cache = step(params, cache, jnp.asarray(prompts[:, t:t + 1]))
+    prefill_s = time.time() - t0
+
+    outs = []
+    t0 = time.time()
+    tok = jnp.argmax(logits[:, -1], axis=-1, keepdims=True).astype(jnp.int32)
+    for t in range(args.gen):
+        outs.append(np.asarray(tok)[:, 0])
+        logits, cache = step(params, cache, tok)
+        if args.temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits[:, -1] / args.temperature)[:, None]
+            tok = tok.astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits[:, -1], axis=-1, keepdims=True).astype(jnp.int32)
+    decode_s = time.time() - t0
+    gen = np.stack(outs, axis=1)
+    print(f"arch={cfg.name} batch={b} prompt={args.prompt_len} gen={args.gen}")
+    print(f"prefill: {prefill_s:.2f}s  decode: {decode_s:.2f}s "
+          f"({b*args.gen/max(decode_s,1e-9):.1f} tok/s batched)")
+    print("sample token ids:", gen[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

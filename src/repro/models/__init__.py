@@ -1,0 +1,4 @@
+from repro.models.fnn import make_fnn
+from repro.models.lstm_lm import make_lstm_lm
+
+__all__ = ["make_fnn", "make_lstm_lm"]

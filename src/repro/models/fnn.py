@@ -1,0 +1,58 @@
+"""The paper's image-classification models (§VI-A):
+
+- 2FNN: 784 -> 100 -> 10, ReLU hidden, log-softmax output.
+- 3FNN: 784 -> 200 -> 200 -> 10.
+
+Pure-pytree models (no flax): params is a list of (W, b).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SmallModel", "make_fnn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SmallModel:
+    name: str
+    init: Callable[[jax.Array], list]
+    loss_fn: Callable[[list, tuple], jax.Array]       # (params, (x, y)) -> scalar
+    predict: Callable[[list, jax.Array], jax.Array]   # logits
+
+
+def make_fnn(hidden: Sequence[int] = (100,), in_dim: int = 784, out_dim: int = 10) -> SmallModel:
+    dims = [in_dim, *hidden, out_dim]
+
+    def init(key: jax.Array) -> list:
+        params = []
+        for i in range(len(dims) - 1):
+            key, sub = jax.random.split(key)
+            scale = jnp.sqrt(2.0 / dims[i])
+            params.append(
+                (
+                    scale * jax.random.normal(sub, (dims[i], dims[i + 1]), jnp.float32),
+                    jnp.zeros((dims[i + 1],), jnp.float32),
+                )
+            )
+        return params
+
+    def predict(params: list, x: jax.Array) -> jax.Array:
+        h = x.reshape(x.shape[0], -1)
+        for i, (w, b) in enumerate(params):
+            h = h @ w + b
+            if i < len(params) - 1:
+                h = jax.nn.relu(h)
+        return h
+
+    def loss_fn(params: list, batch: tuple) -> jax.Array:
+        x, y = batch
+        logits = predict(params, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
+
+    name = f"fnn{len(hidden) + 1}_{'x'.join(map(str, hidden))}"
+    return SmallModel(name=name, init=init, loss_fn=loss_fn, predict=predict)

@@ -1,0 +1,78 @@
+"""The paper's language model (§VI-F): embedding -> 2-layer LSTM -> FC over
+vocab; loss on the *last* time step's next-word prediction; AccuracyTop1
+metric. Sized down via arguments for the synthetic Reddit stand-in.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.fnn import SmallModel
+
+__all__ = ["make_lstm_lm"]
+
+
+def _lstm_cell(params, h, c, x):
+    wx, wh, b = params
+    z = x @ wx + h @ wh + b
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h, c
+
+
+def make_lstm_lm(vocab: int = 1000, embed: int = 128, hidden: int = 256, layers: int = 2) -> SmallModel:
+    def init(key: jax.Array) -> dict:
+        keys = jax.random.split(key, 2 + 3 * layers)
+        params: dict = {
+            "embed": 0.1 * jax.random.normal(keys[0], (vocab, embed), jnp.float32),
+            "out_w": 0.1 * jax.random.normal(keys[1], (hidden, vocab), jnp.float32),
+            "out_b": jnp.zeros((vocab,), jnp.float32),
+            "cells": [],
+        }
+        d_in = embed
+        for l in range(layers):
+            k1, k2 = keys[2 + 2 * l], keys[3 + 2 * l]
+            sx = jnp.sqrt(1.0 / d_in)
+            sh = jnp.sqrt(1.0 / hidden)
+            params["cells"].append(
+                (
+                    sx * jax.random.normal(k1, (d_in, 4 * hidden), jnp.float32),
+                    sh * jax.random.normal(k2, (hidden, 4 * hidden), jnp.float32),
+                    jnp.zeros((4 * hidden,), jnp.float32),
+                )
+            )
+            d_in = hidden
+        return params
+
+    def _run(params: dict, tokens: jax.Array) -> jax.Array:
+        """tokens (B, T) -> final hidden state (B, H)."""
+        x = params["embed"][tokens]  # (B, T, E)
+        b = tokens.shape[0]
+        h_seq = x
+        for cell in params["cells"]:
+            hidden_dim = cell[1].shape[0]
+            h0 = jnp.zeros((b, hidden_dim), x.dtype)
+            c0 = jnp.zeros((b, hidden_dim), x.dtype)
+
+            def step(carry, xt, cell=cell):
+                h, c = carry
+                h, c = _lstm_cell(cell, h, c, xt)
+                return (h, c), h
+
+            (_, _), hs = jax.lax.scan(step, (h0, c0), jnp.swapaxes(h_seq, 0, 1))
+            h_seq = jnp.swapaxes(hs, 0, 1)
+        return h_seq[:, -1, :]
+
+    def predict(params: dict, tokens: jax.Array) -> jax.Array:
+        h = _run(params, tokens)
+        return h @ params["out_w"] + params["out_b"]
+
+    def loss_fn(params: dict, batch: tuple) -> jax.Array:
+        tokens, next_tokens = batch
+        target = next_tokens[:, -1] if next_tokens.ndim > 1 else next_tokens
+        logits = predict(params, tokens)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.take_along_axis(logp, target[:, None], axis=-1).mean()
+
+    return SmallModel(name=f"lstm{layers}_{hidden}", init=init, loss_fn=loss_fn, predict=predict)

@@ -1,0 +1,324 @@
+"""Unified decoder/encoder-decoder LM over `ArchConfig`.
+
+One implementation covers all ten assigned architectures:
+- layer *blocks* (cfg.block_pattern) are scanned with stacked params, so an
+  80-layer model lowers as a single rolled loop (fast multi-arch dry-runs);
+- each block slot is attn (GQA or MLA) or mamba (SSD), with dense or MoE FFN;
+- enc-dec (seamless) adds a scanned bidirectional encoder + cross-attention;
+- VLM/audio frontends are stubs per the brief: the caller supplies
+  precomputed patch/frame embeddings which are prepended (VLM) or encoded
+  (audio enc-dec).
+
+Public API: init_params / abstract_params / forward_train / loss_fn /
+init_cache / decode_step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models import layers as L
+
+__all__ = [
+    "init_params",
+    "abstract_params",
+    "forward_train",
+    "loss_fn",
+    "init_cache",
+    "decode_step",
+]
+
+
+# ----------------------------------------------------------------- builders
+def _init_slot(key, cfg: ArchConfig, slot: int, dtype) -> dict:
+    kind = cfg.block_pattern[slot]
+    k1, k2 = jax.random.split(key)
+    p: dict = {"norm1": jnp.ones((cfg.d_model,), dtype), "norm2": jnp.ones((cfg.d_model,), dtype)}
+    if kind == "attn":
+        p["mixer"] = (
+            L.init_mla(k1, cfg, dtype) if cfg.attn_type == "mla" else L.init_attn(k1, cfg, dtype)
+        )
+    else:
+        p["mixer"] = L.init_mamba(k1, cfg, dtype)
+    fk = cfg.ffn_kind(slot)
+    if fk == "moe":
+        p["ffn"] = L.init_moe(k2, cfg, dtype)
+    elif fk == "dense":
+        p["ffn"] = L.init_ffn(k2, cfg.d_model, cfg.d_ff, dtype)
+    else:  # "none" (e.g. mamba2: the mixer IS the layer)
+        del p["norm2"]
+    return p
+
+
+def _init_block(key, cfg: ArchConfig, dtype) -> dict:
+    keys = jax.random.split(key, len(cfg.block_pattern))
+    return {f"slot{i}": _init_slot(keys[i], cfg, i, dtype) for i in range(len(cfg.block_pattern))}
+
+
+def _init_enc_layer(key, cfg: ArchConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "mixer": L.init_attn(k1, cfg, dtype),
+        "ffn": L.init_ffn(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_cross_layer(key, cfg: ArchConfig, dtype) -> dict:
+    return {"norm": jnp.ones((cfg.d_model,), dtype), "mixer": L.init_attn(key, cfg, dtype)}
+
+
+def init_params(cfg: ArchConfig, key: jax.Array, dtype=jnp.bfloat16) -> dict:
+    """Concrete init. Blocks are stacked along a leading n_blocks dim."""
+    kb, ke, kh, kenc, kx = jax.random.split(key, 5)
+    block_keys = jax.random.split(kb, cfg.n_blocks)
+    blocks = [_init_block(block_keys[i], cfg, dtype) for i in range(cfg.n_blocks)]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+    params = {
+        "embed": (0.02 * jax.random.normal(ke, (cfg.vocab, cfg.d_model), jnp.float32)).astype(dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "blocks": stacked,
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = (
+            0.02 * jax.random.normal(kh, (cfg.d_model, cfg.vocab), jnp.float32)
+        ).astype(dtype)
+    if cfg.enc_dec:
+        enc_keys = jax.random.split(kenc, cfg.n_enc_layers)
+        encs = [_init_enc_layer(k, cfg, dtype) for k in enc_keys]
+        params["encoder"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *encs)
+        x_keys = jax.random.split(kx, cfg.n_blocks)
+        crosses = [_init_cross_layer(k, cfg, dtype) for k in x_keys]
+        params["cross"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *crosses)
+        params["enc_norm"] = jnp.ones((cfg.d_model,), dtype)
+    return params
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16) -> Any:
+    """ShapeDtypeStruct pytree (no allocation) for .lower() dry-runs."""
+    return jax.eval_shape(lambda k: init_params(cfg, k, dtype), jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------------------------ forward
+def _bp_constraint(h: jax.Array, axes=("data", "model")):
+    """Batch-parallel attention region: activations sharded over `axes` on
+    the batch dim (no tensor parallelism inside attention; XLA inserts the
+    boundary reshards). `axes` shrinks to ("data",) for shapes whose batch
+    does not divide data*model (uneven GSPMD padding costs compute). Only
+    active under a mesh that has the axes (the dry-run/production path)."""
+    from jax.sharding import PartitionSpec as _P
+
+    try:
+        spec = tuple(axes) if len(axes) > 1 else axes[0]
+        return jax.lax.with_sharding_constraint(
+            h, _P(spec, *([None] * (h.ndim - 1)))
+        )
+    except (ValueError, KeyError, RuntimeError, TypeError):
+        return h  # host mesh without those axes
+
+
+def _apply_slot(p: dict, x: jax.Array, cfg: ArchConfig, slot: int, cos, sin):
+    kind = cfg.block_pattern[slot]
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if kind == "attn":
+        if cfg.attn_batch_parallel:
+            h = _bp_constraint(h, cfg.attn_bp_axes)
+        if cfg.attn_type == "mla":
+            h = L.mla_train(p["mixer"], h, cfg, cos, sin)
+        else:
+            h = L.attn_train(p["mixer"], h, cfg, cos, sin)
+        if cfg.attn_batch_parallel:
+            h = _bp_constraint(h, cfg.attn_bp_axes)
+    else:
+        h = L.mamba_train(p["mixer"], h, cfg)
+    x = x + h
+    fk = cfg.ffn_kind(slot)
+    if fk == "none":
+        return x, jnp.zeros((), jnp.float32)
+    h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    if fk == "moe":
+        h, aux = L.moe_apply(p["ffn"], h, cfg)
+    else:
+        h, aux = L.ffn_apply(p["ffn"], h), jnp.zeros((), jnp.float32)
+    return x + h, aux
+
+
+def _block_fn(cfg: ArchConfig, x, bp, cos, sin):
+    aux_total = jnp.zeros((), jnp.float32)
+    for i in range(len(cfg.block_pattern)):
+        x, aux = _apply_slot(bp[f"slot{i}"], x, cfg, i, cos, sin)
+        aux_total = aux_total + aux
+    return x, aux_total
+
+
+def _run_blocks(cfg: ArchConfig, params: dict, x: jax.Array, cos, sin,
+                enc_out: jax.Array | None = None, remat: bool = True,
+                unroll: bool = False):
+    def body(carry, bp_and_cross):
+        h = carry
+        if cfg.enc_dec:
+            bp, cp = bp_and_cross
+        else:
+            bp, cp = bp_and_cross, None
+        h, aux = _block_fn(cfg, h, bp, cos, sin)
+        if cp is not None:
+            hn = L.rms_norm(h, cp["norm"], cfg.norm_eps)
+            h = h + L.attn_train(cp["mixer"], hn, cfg, cos, sin, kv_override=enc_out)
+        return h, aux
+
+    body_fn = jax.checkpoint(body) if remat else body
+    xs = (params["blocks"], params["cross"]) if cfg.enc_dec else params["blocks"]
+    x, auxs = jax.lax.scan(body_fn, x, xs, unroll=True if unroll else 1)
+    return x, jnp.sum(auxs)
+
+
+def _run_encoder(cfg: ArchConfig, params: dict, embeds: jax.Array, remat: bool = True,
+                 unroll: bool = False):
+    l = embeds.shape[1]
+    cos, sin = L.rope_freqs(jnp.arange(l), cfg.head_dim_, cfg.rope_theta)
+
+    def body(h, lp):
+        hn = L.rms_norm(h, lp["norm1"], cfg.norm_eps)
+        h = h + L.attn_train(lp["mixer"], hn, cfg, cos, sin, causal=False)
+        hn = L.rms_norm(h, lp["norm2"], cfg.norm_eps)
+        h = h + L.ffn_apply(lp["ffn"], hn)
+        return h, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    h, _ = jax.lax.scan(body_fn, embeds, params["encoder"], unroll=True if unroll else 1)
+    return L.rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def forward_train(cfg: ArchConfig, params: dict, tokens: jax.Array,
+                  frontend_embeds: jax.Array | None = None, remat: bool = True,
+                  unroll: bool = False):
+    """tokens (B, S_text). frontend_embeds (B, F, d) for vlm/audio stubs.
+
+    Returns (logits over text positions, aux_loss)."""
+    dtype = params["embed"].dtype
+    x = params["embed"][tokens].astype(dtype)
+    enc_out = None
+    n_front = 0
+    if cfg.enc_dec:
+        assert frontend_embeds is not None, "enc-dec needs encoder embeddings"
+        enc_out = _run_encoder(cfg, params, frontend_embeds.astype(dtype), remat, unroll)
+    elif frontend_embeds is not None:
+        n_front = frontend_embeds.shape[1]
+        x = jnp.concatenate([frontend_embeds.astype(dtype), x], axis=1)
+    l = x.shape[1]
+    rope_dim = cfg.mla.qk_rope_dim if cfg.attn_type == "mla" else cfg.head_dim_
+    cos, sin = L.rope_freqs(jnp.arange(l), rope_dim, cfg.rope_theta)
+    x, aux = _run_blocks(cfg, params, x, cos, sin, enc_out=enc_out, remat=remat, unroll=unroll)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if n_front > 0:
+        x = x[:, n_front:, :]
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ head
+    return logits, aux
+
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: dict, remat: bool = True,
+            unroll: bool = False) -> jax.Array:
+    """batch: {"tokens": (B,S), "labels": (B,S), optional "embeds": (B,F,d)}."""
+    logits, aux = forward_train(
+        cfg, params, batch["tokens"], batch.get("embeds"), remat=remat, unroll=unroll
+    )
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    labels = batch["labels"]
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll) + aux
+
+
+# ------------------------------------------------------------------- decode
+def _init_cache_slot(cfg: ArchConfig, slot: int, batch: int, max_len: int, dtype) -> dict:
+    kind = cfg.block_pattern[slot]
+    if kind == "attn":
+        if cfg.attn_type == "mla":
+            return L.init_cache_mla(cfg, batch, max_len, dtype)
+        return L.init_cache_attn(cfg, batch, max_len, dtype)
+    return L.init_cache_mamba(cfg, batch, dtype)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               enc_len: int = 0) -> dict:
+    """Stacked (n_blocks-leading) cache pytree; enc-dec additionally caches
+    the encoder output for cross-attention."""
+    def stack(make):
+        one = make()
+        return jax.tree_util.tree_map(
+            lambda leaf: jnp.broadcast_to(leaf, (cfg.n_blocks, *leaf.shape)).copy(), one
+        )
+
+    cache = {
+        "slots": {
+            f"slot{i}": stack(functools.partial(_init_cache_slot, cfg, i, batch, max_len, dtype))
+            for i in range(len(cfg.block_pattern))
+        },
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if cfg.enc_dec:
+        cache["enc_out"] = jnp.zeros((batch, enc_len or cfg.frontend_tokens, cfg.d_model), dtype)
+    return cache
+
+
+def decode_step(cfg: ArchConfig, params: dict, cache: dict, token: jax.Array,
+                unroll: bool = False):
+    """token (B, 1) int32 -> (logits (B, 1, V), new cache). serve_step body."""
+    dtype = params["embed"].dtype
+    x = params["embed"][token].astype(dtype)
+    pos = cache["pos"]
+    enc_out = cache.get("enc_out")
+
+    def body(carry, scanned):
+        h = carry
+        if cfg.enc_dec:
+            bp, cp, bc = scanned
+        else:
+            (bp, bc), cp = scanned, None
+        new_bc = {}
+        for i in range(len(cfg.block_pattern)):
+            p = bp[f"slot{i}"]
+            kind = cfg.block_pattern[i]
+            hn = L.rms_norm(h, p["norm1"], cfg.norm_eps)
+            if kind == "attn":
+                if cfg.attn_type == "mla":
+                    out, nc = L.mla_decode(p["mixer"], hn, bc[f"slot{i}"], pos, cfg)
+                else:
+                    out, nc = L.attn_decode(p["mixer"], hn, bc[f"slot{i}"], pos, cfg)
+            else:
+                out, nc = L.mamba_decode(p["mixer"], hn, bc[f"slot{i}"], cfg)
+            h = h + out
+            new_bc[f"slot{i}"] = nc
+            fk = cfg.ffn_kind(i)
+            if fk != "none":
+                hn = L.rms_norm(h, p["norm2"], cfg.norm_eps)
+                if fk == "moe":
+                    out, _ = L.moe_apply(p["ffn"], hn, cfg)
+                else:
+                    out = L.ffn_apply(p["ffn"], hn)
+                h = h + out
+        if cp is not None:
+            hn = L.rms_norm(h, cp["norm"], cfg.norm_eps)
+            cos, sin = L.rope_freqs(pos[None], cfg.head_dim_, cfg.rope_theta)
+            h = h + L.attn_train(cp["mixer"], hn, cfg, cos, sin, kv_override=enc_out)
+        return h, new_bc
+
+    if cfg.enc_dec:
+        xs = (params["blocks"], params["cross"], cache["slots"])
+    else:
+        xs = (params["blocks"], cache["slots"])
+    x, new_slots = jax.lax.scan(body, x, xs, unroll=True if unroll else 1)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ head
+    new_cache = dict(cache)
+    new_cache["slots"] = new_slots
+    new_cache["pos"] = pos + 1
+    return logits, new_cache

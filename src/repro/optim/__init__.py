@@ -1,0 +1,19 @@
+from repro.optim.sgd import (
+    decreasing_lr,
+    sgd_update,
+    MomentumState,
+    momentum_init,
+    momentum_update,
+    adamw_init,
+    adamw_update,
+)
+
+__all__ = [
+    "decreasing_lr",
+    "sgd_update",
+    "MomentumState",
+    "momentum_init",
+    "momentum_update",
+    "adamw_init",
+    "adamw_update",
+]

@@ -1,0 +1,91 @@
+"""Optimizers.
+
+Protocol scale uses the paper's decreasing-step SGD:
+    eta^kbar = 1 / (R * kbar^q),  kbar = (t-1)K + k   (paper §VI-B, q=0.499)
+which satisfies Assumption 2 for 1/2 < q < 1.
+
+Pod scale additionally provides momentum SGD and AdamW (the framework's
+default for the assigned LLM architectures).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "decreasing_lr",
+    "sgd_update",
+    "MomentumState",
+    "momentum_init",
+    "momentum_update",
+    "adamw_init",
+    "adamw_update",
+]
+
+
+def decreasing_lr(kbar: jax.Array | int, r: float = 5.0, q: float = 0.499) -> jax.Array:
+    """eta^kbar = 1/(R * kbar^q); kbar counts global SGD steps from 1."""
+    kbar = jnp.maximum(jnp.asarray(kbar, jnp.float32), 1.0)
+    return 1.0 / (r * kbar**q)
+
+
+def sgd_update(params: Any, grads: Any, lr: jax.Array) -> Any:
+    return jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MomentumState:
+    velocity: Any
+
+    def tree_flatten(self):
+        return (self.velocity,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def momentum_init(params: Any) -> MomentumState:
+    return MomentumState(jax.tree_util.tree_map(jnp.zeros_like, params))
+
+
+def momentum_update(
+    params: Any, grads: Any, state: MomentumState, lr: jax.Array, beta: float = 0.9
+) -> tuple[Any, MomentumState]:
+    vel = jax.tree_util.tree_map(lambda v, g: beta * v + g, state.velocity, grads)
+    new = jax.tree_util.tree_map(lambda p, v: p - lr * v, params, vel)
+    return new, MomentumState(vel)
+
+
+def adamw_init(params: Any) -> dict:
+    zeros = lambda: jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros(), "v": zeros(), "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(
+    params: Any,
+    grads: Any,
+    state: dict,
+    lr: jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> tuple[Any, dict]:
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1**cf), m)
+    vh = jax.tree_util.tree_map(lambda v: v / (1 - b2**cf), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p),
+        params,
+        mh,
+        vh,
+    )
+    return new, {"m": m, "v": v, "count": count}

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Make `import repro` work without installation. Deliberately does NOT set
+# XLA_FLAGS device-count overrides: smoke tests and benches must see the
+# host's single device (the 512-device placeholder lives only inside
+# repro/launch/dryrun.py, which tests exercise via subprocess).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

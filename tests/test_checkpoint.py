@@ -1,0 +1,46 @@
+"""Checkpoint substrate tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+
+
+def test_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3), "b": [jnp.ones(4), jnp.zeros((2, 2))],
+            "c": {"d": jnp.array(3)}}
+    save_checkpoint(str(tmp_path), 7, tree, metrics={"loss": 1.5})
+    template = jax.tree_util.tree_map(lambda x: jnp.zeros_like(x), tree)
+    back, meta = load_checkpoint(str(tmp_path), template)
+    assert meta["step"] == 7 and meta["metrics"]["loss"] == 1.5
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_step(tmp_path):
+    assert latest_step(str(tmp_path)) is None
+    save_checkpoint(str(tmp_path), 3, {"x": jnp.zeros(2)})
+    save_checkpoint(str(tmp_path), 12, {"x": jnp.ones(2)})
+    assert latest_step(str(tmp_path)) == 12
+    back, meta = load_checkpoint(str(tmp_path), {"x": jnp.zeros(2)})
+    assert meta["step"] == 12 and float(back["x"][0]) == 1.0
+
+
+def test_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"x": jnp.zeros((2, 2))})
+    with pytest.raises(AssertionError):
+        load_checkpoint(str(tmp_path), {"x": jnp.zeros((3,))})
+
+
+def test_model_params_roundtrip(tmp_path):
+    from repro.configs import get_smoke
+    from repro.models import transformer as T
+
+    cfg = get_smoke("yi-6b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    save_checkpoint(str(tmp_path), 100, params)
+    back, _ = load_checkpoint(str(tmp_path), params)
+    a = jax.tree_util.tree_leaves(params)[3]
+    b = jax.tree_util.tree_leaves(back)[3]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

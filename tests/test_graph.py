@@ -1,0 +1,80 @@
+"""Graph / Metropolis-Hastings transition matrix tests (paper Eq. 7, Def. 4,
+Lemma 2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import (
+    complete_graph,
+    expander_graph,
+    lambda_p,
+    make_topology,
+    metropolis_hastings_matrix,
+    mixing_time,
+    ring_graph,
+)
+
+
+TOPOLOGIES = ["complete", "ring", "expander3", "expander5", "star", "erdos_renyi"]
+
+
+@pytest.mark.parametrize("name", TOPOLOGIES)
+@pytest.mark.parametrize("n", [4, 20, 33])
+def test_mh_matrix_doubly_stochastic(name, n):
+    topo = make_topology(name, n)
+    P = topo.transition
+    np.testing.assert_allclose(P.sum(axis=1), 1.0, atol=1e-12)
+    np.testing.assert_allclose(P.sum(axis=0), 1.0, atol=1e-12)  # symmetric MH
+    assert (P >= -1e-15).all()
+
+
+@pytest.mark.parametrize("name", TOPOLOGIES)
+def test_uniform_stationary_distribution(name):
+    n = 12
+    topo = make_topology(name, n)
+    pi = np.full(n, 1.0 / n)
+    np.testing.assert_allclose(pi @ topo.transition, pi, atol=1e-12)
+
+
+def test_lambda_p_in_range():
+    for name in TOPOLOGIES:
+        topo = make_topology(name, 16)
+        assert 0.0 <= topo.lambda_p < 1.0, (name, topo.lambda_p)
+
+
+def test_mixing_ordering_matches_connectivity():
+    """Better expansion => faster mixing (paper §VI-C: complete < E5 < E3 < ring)."""
+    n = 24
+    taus = {
+        name: mixing_time(make_topology(name, n).transition)
+        for name in ["complete", "expander5", "expander3", "ring"]
+    }
+    assert taus["complete"] <= taus["expander5"] <= taus["ring"]
+    assert taus["expander3"] <= taus["ring"]
+
+
+def test_power_convergence_bound():
+    """Lemma 2: max_i ||Pi* - P^tau(i,:)|| <= zeta * lambda_P^tau."""
+    topo = make_topology("expander3", 16)
+    P = topo.transition
+    n = topo.n
+    Pk = np.linalg.matrix_power(P, 60)
+    err = np.abs(Pk - 1.0 / n).max()
+    assert err < 1e-2
+
+
+def test_self_loops_and_symmetry():
+    for g in (complete_graph(7), ring_graph(7), expander_graph(9, 3)):
+        assert (g == g.T).all()
+        assert g.diagonal().all()
+
+
+@given(n=st.integers(4, 24), seed=st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_mh_rows_stochastic_random_graphs(n, seed):
+    from repro.core.graph import erdos_renyi_graph
+
+    adj = erdos_renyi_graph(n, 0.4, seed=seed)
+    P = metropolis_hastings_matrix(adj)
+    np.testing.assert_allclose(P.sum(axis=1), 1.0, atol=1e-12)
+    assert abs(lambda_p(P)) < 1.0 + 1e-12

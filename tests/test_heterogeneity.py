@@ -1,0 +1,83 @@
+"""Partitioner tests (paper §VI-A deterministic/probabilistic partitioning)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.heterogeneity import (
+    delta_squared,
+    partition_dirichlet,
+    partition_nonbalance,
+    partition_similarity,
+)
+
+
+def _labels(n=4000, c=10, seed=0):
+    return np.random.default_rng(seed).integers(0, c, size=n)
+
+
+def _label_entropy(labels, idx):
+    counts = np.bincount(labels[idx], minlength=10).astype(float)
+    p = counts / counts.sum()
+    p = p[p > 0]
+    return -(p * np.log(p)).sum()
+
+
+def test_similarity_u100_is_iid_like():
+    y = _labels()
+    part = partition_similarity(y, 20, 100, np.random.default_rng(0))
+    ents = [_label_entropy(y, ix) for ix in part.client_indices]
+    assert min(ents) > 2.0  # near-uniform over 10 classes (ln10 ~ 2.3)
+
+
+def test_similarity_u0_is_sharded():
+    y = _labels()
+    part = partition_similarity(y, 20, 0, np.random.default_rng(0))
+    n_labels = [len(np.unique(y[ix])) for ix in part.client_indices]
+    assert max(n_labels) <= 4  # ~2 shards => few labels per client
+
+
+def test_dirichlet_alpha_controls_skew():
+    y = _labels()
+    e_small = np.mean([
+        _label_entropy(y, ix)
+        for ix in partition_dirichlet(y, 20, 0.1, np.random.default_rng(0)).client_indices
+    ])
+    e_big = np.mean([
+        _label_entropy(y, ix)
+        for ix in partition_dirichlet(y, 20, 100.0, np.random.default_rng(0)).client_indices
+    ])
+    assert e_small < e_big
+
+
+def test_nonbalance_equal_sizes_skewed_labels():
+    y = _labels()
+    part = partition_nonbalance(y, 10, np.random.default_rng(0), max_per_label=150)
+    sizes = part.sizes()
+    assert sizes.max() - sizes.min() <= 1 or sizes.min() > 0
+    ents = [_label_entropy(y, ix) for ix in part.client_indices]
+    assert np.mean(ents) < 2.0  # skewed
+
+
+def test_as_dense_covers_clients():
+    y = _labels(1000)
+    part = partition_similarity(y, 10, 50, np.random.default_rng(0))
+    idx, mask = part.as_dense()
+    assert idx.shape[0] == 10 and mask.shape == idx.shape
+    assert (idx >= 0).all() and (idx < 1000).all()
+
+
+def test_delta_squared():
+    assert delta_squared(np.array([4.0, 4.0]), 4.0) == 1.0
+    assert delta_squared(np.array([8.0, 8.0]), 4.0) == 2.0
+    assert delta_squared(np.array([1.0]), 0.0) == 1.0
+
+
+@given(n_clients=st.integers(2, 30), u=st.sampled_from([0, 25, 50, 75, 100]))
+@settings(max_examples=20, deadline=None)
+def test_property_similarity_partition_valid(n_clients, u):
+    y = _labels(3000, seed=42)
+    part = partition_similarity(y, n_clients, u, np.random.default_rng(1))
+    assert part.n_clients == n_clients
+    for ix in part.client_indices:
+        assert len(ix) > 0
+        assert (np.asarray(ix) < 3000).all()

@@ -1,0 +1,56 @@
+"""Pallas stochastic-quantization kernel vs pure-jnp oracle: shape/dtype/bits
+sweep in interpret mode (kernel body executes on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.quantize import stochastic_quantize, stochastic_dequantize
+from repro.kernels.quantize.ref import dequantize_ref, quantize_ref
+
+SHAPES = [(64,), (1000,), (128, 128), (64, 129), (3, 5, 7), (65536,), (2048, 33)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+BITS = [4, 8]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("bits", BITS)
+def test_kernel_matches_oracle(shape, dtype, bits):
+    key = jax.random.PRNGKey(hash((shape, bits)) % (2**31))
+    w = (jax.random.normal(key, shape, jnp.float32) * 2.3).astype(dtype)
+    s = 1.0 / ((1 << (bits - 1)) - 1)
+    q, norm = stochastic_quantize(w, key, s=s, bits=bits, interpret=True)
+    flat = w.reshape(-1).astype(jnp.float32)
+    u = jax.random.uniform(key, flat.shape, dtype=jnp.float32)
+    q_ref = quantize_ref(flat, u, norm, s=s, bits=bits).reshape(shape)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+
+    deq = stochastic_dequantize(q, norm, s=s, interpret=True)
+    deq_ref = dequantize_ref(q_ref, norm, s=s)
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(deq_ref), rtol=1e-6)
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_kernel_error_bound(bits):
+    """Reconstruction error within one grid cell: |deq - w| <= s * ||w||."""
+    key = jax.random.PRNGKey(7)
+    w = jax.random.normal(key, (4096,)) * 10.0
+    s = 1.0 / ((1 << (bits - 1)) - 1)
+    q, norm = stochastic_quantize(w, key, s=s, bits=bits, interpret=True)
+    deq = stochastic_dequantize(q, norm, s=s, interpret=True)
+    assert float(jnp.abs(deq - w).max()) <= s * float(norm) * (1 + 1e-5)
+
+
+def test_kernel_unbiased_statistically():
+    key = jax.random.PRNGKey(9)
+    w = jax.random.normal(key, (512,))
+    s = 1.0 / 127
+    acc = jnp.zeros_like(w)
+    n = 100
+    for i in range(n):
+        q, norm = stochastic_quantize(w, jax.random.PRNGKey(i), s=s, bits=8, interpret=True)
+        acc = acc + stochastic_dequantize(q, norm, s=s, interpret=True)
+    bias = jnp.abs(acc / n - w).max()
+    norm = float(jnp.linalg.norm(w))
+    assert float(bias) < 5.0 * s * norm / 2.0 / np.sqrt(n)

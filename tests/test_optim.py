@@ -1,0 +1,63 @@
+"""Optimizer + LR schedule tests (paper Assumption 2, §VI-B)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (
+    adamw_init,
+    adamw_update,
+    decreasing_lr,
+    momentum_init,
+    momentum_update,
+    sgd_update,
+)
+
+
+def test_decreasing_lr_matches_paper_form():
+    # eta^k = 1/(R k^q)
+    assert np.isclose(float(decreasing_lr(1, r=5.0, q=0.499)), 1 / 5.0)
+    assert np.isclose(float(decreasing_lr(100, r=10.0, q=0.5)), 1 / (10 * 10.0), rtol=1e-3)
+    ks = np.arange(1, 1000)
+    lrs = np.array([float(decreasing_lr(k, 5.0, 0.499)) for k in [1, 10, 100, 999]])
+    assert (np.diff(lrs) < 0).all()
+
+
+def test_assumption2_summability():
+    """sum eta = inf (divergent), sum ln k * eta^2 < inf for 1/2<q<1."""
+    q, r = 0.6, 1.0
+    k = np.arange(1, 200000, dtype=np.float64)
+    eta = 1.0 / (r * k**q)
+    # partial sums grow without bound (compare to integral k^{1-q})
+    assert eta.sum() > 10.0
+    tail = (np.log(k) * eta**2)
+    assert tail[-50000:].sum() < tail[:1000].sum()  # converging tail
+
+
+def test_sgd_and_momentum_reduce_quadratic():
+    def loss(p):
+        return jnp.sum((p - 3.0) ** 2)
+
+    p = jnp.zeros(4)
+    for k in range(200):
+        g = jax.grad(loss)(p)
+        p = sgd_update(p, g, 0.1)
+    assert float(loss(p)) < 1e-6
+
+    p = jnp.zeros(4)
+    st = momentum_init(p)
+    for k in range(200):
+        g = jax.grad(loss)(p)
+        p, st = momentum_update(p, g, st, 0.02)
+    assert float(loss(p)) < 1e-6
+
+
+def test_adamw():
+    def loss(p):
+        return jnp.sum((p["w"] - 1.0) ** 2)
+
+    p = {"w": jnp.zeros(3)}
+    st = adamw_init(p)
+    for k in range(300):
+        g = jax.grad(loss)(p)
+        p, st = adamw_update(p, g, st, 0.05, weight_decay=0.0)
+    assert float(loss(p)) < 1e-4

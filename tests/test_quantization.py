@@ -1,0 +1,95 @@
+"""Stochastic quantization tests (paper Eq. 12, Lemma 3, §IV-B wire costs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import (
+    QuantConfig,
+    dequantize,
+    pytree_wire_bits,
+    quantize,
+    quantize_pytree,
+    dequantize_pytree,
+    wire_bits,
+)
+
+
+def test_unbiased():
+    """E[Q(w)] = w (the scheme's defining property)."""
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (257,)) * 2.0
+    cfg = QuantConfig(bits=8)
+    acc = jnp.zeros_like(w)
+    n = 200
+    for i in range(n):
+        q = quantize(w, cfg, jax.random.PRNGKey(i))
+        acc = acc + dequantize(q)
+    mean = acc / n
+    norm = float(jnp.linalg.norm(w))
+    # s.e. of the mean <= s*norm/(2 sqrt(n)) per Lemma 3
+    tol = 4.0 * cfg.interval * norm / (2.0 * np.sqrt(n))
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(w), atol=tol)
+
+
+@pytest.mark.parametrize("bits", [4, 8, 16])
+def test_variance_bound_lemma3(bits):
+    """E||Q(w)-w||^2 <= sigma^2 d s^2 / 4 with sigma=||w||."""
+    key = jax.random.PRNGKey(1)
+    w = jax.random.normal(key, (513,))
+    cfg = QuantConfig(bits=bits)
+    errs = []
+    for i in range(50):
+        q = quantize(w, cfg, jax.random.PRNGKey(100 + i))
+        errs.append(float(jnp.sum((dequantize(q) - w) ** 2)))
+    bound = float(jnp.linalg.norm(w)) ** 2 * w.size * cfg.interval**2 / 4.0
+    assert np.mean(errs) <= bound * 1.05
+
+
+def test_per_element_error_bound():
+    """|deq - w| <= s * ||w|| always (one grid cell)."""
+    key = jax.random.PRNGKey(2)
+    w = jax.random.normal(key, (100, 7)) * 5.0
+    cfg = QuantConfig(bits=8)
+    q = quantize(w, cfg, key)
+    err = jnp.abs(dequantize(q).reshape(w.shape) - w)
+    assert float(err.max()) <= cfg.interval * float(jnp.linalg.norm(w)) + 1e-6
+
+
+def test_zero_vector():
+    cfg = QuantConfig(bits=8)
+    q = quantize(jnp.zeros((16,)), cfg, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(dequantize(q)), np.zeros(16))
+
+
+def test_wire_bits_formula():
+    # Paper §IV-B: quantized vector costs 64 + b*d bits; fp32 costs 32*d.
+    assert wire_bits(1000, 8) == 64 + 8 * 1000
+    assert wire_bits(1000, 32) == 32 * 1000
+    tree = {"a": jnp.zeros((10, 10)), "b": jnp.zeros((5,))}
+    assert pytree_wire_bits(tree, 8) == (64 + 800) + (64 + 40)
+
+
+def test_pytree_roundtrip_shapes():
+    tree = {"w": jnp.ones((3, 4)), "b": jnp.arange(5.0)}
+    cfg = QuantConfig(bits=8)
+    qt = quantize_pytree(tree, cfg, jax.random.PRNGKey(0))
+    back = dequantize_pytree(qt)
+    assert back["w"].shape == (3, 4) and back["b"].shape == (5,)
+
+
+@given(
+    d=st.integers(1, 300),
+    bits=st.sampled_from([4, 6, 8]),
+    seed=st.integers(0, 1000),
+    scale=st.floats(1e-3, 1e3),
+)
+@settings(max_examples=30, deadline=None)
+def test_property_error_within_one_cell(d, bits, seed, scale):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (d,)) * scale
+    cfg = QuantConfig(bits=bits)
+    q = quantize(w, cfg, jax.random.fold_in(key, 1))
+    err = jnp.abs(dequantize(q) - w)
+    assert float(err.max()) <= cfg.interval * float(jnp.linalg.norm(w)) * (1 + 1e-5) + 1e-6

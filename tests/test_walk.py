@@ -1,0 +1,78 @@
+"""Random-walk sampling tests (paper §III-D, Lemma 1, straggler model)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import make_topology
+from repro.core.walk import StragglerModel, sample_walks
+
+
+def test_walk_follows_edges():
+    topo = make_topology("ring", 12)
+    rng = np.random.default_rng(0)
+    plan = sample_walks(topo, m=6, k=20, rng=rng)
+    for mm in range(6):
+        for kk in range(19):
+            a, b = plan.devices[mm, kk], plan.devices[mm, kk + 1]
+            assert topo.adjacency[a, b], (a, b)
+
+
+def test_walk_visits_approach_uniform():
+    """MH walk stationary distribution is uniform (paper's design goal)."""
+    topo = make_topology("expander5", 10)
+    rng = np.random.default_rng(1)
+    plan = sample_walks(topo, m=40, k=300, rng=rng)
+    counts = np.bincount(plan.devices.reshape(-1), minlength=10)
+    freq = counts / counts.sum()
+    assert np.abs(freq - 0.1).max() < 0.03
+
+
+def test_partial_mode_keeps_full_length():
+    topo = make_topology("complete", 10)
+    rng = np.random.default_rng(0)
+    strag = StragglerModel(h_percent=50, mode="partial")
+    plan = sample_walks(topo, 5, 7, rng, straggler=strag)
+    assert (plan.k_m == 7).all()
+    assert plan.mask.all()
+
+
+def test_truncate_mode_budgets_chains():
+    topo = make_topology("complete", 10)
+    rng = np.random.default_rng(0)
+    strag = StragglerModel(h_percent=50, slowdown=5.0, mode="truncate")
+    plan = sample_walks(topo, 8, 6, rng, straggler=strag)
+    assert (plan.k_m >= 1).all() and (plan.k_m <= 6).all()
+    slow = strag.slow_mask(10)
+    # A chain that never touches a slow device must run the full K.
+    for mm in range(8):
+        if not slow[plan.devices[mm]].any():
+            assert plan.k_m[mm] == 6
+
+
+def test_slow_mask_deterministic_and_sized():
+    s = StragglerModel(h_percent=30)
+    m1, m2 = s.slow_mask(20), s.slow_mask(20)
+    np.testing.assert_array_equal(m1, m2)
+    assert m1.sum() == 6
+
+
+def test_chain_mode_start_devices():
+    topo = make_topology("complete", 9)
+    rng = np.random.default_rng(0)
+    plan = sample_walks(topo, 3, 4, rng, start_devices=np.array([1, 5, 7]))
+    np.testing.assert_array_equal(plan.devices[:, 0], [1, 5, 7])
+
+
+@given(n=st.integers(4, 30), m=st.integers(1, 8), k=st.integers(1, 15),
+       h=st.sampled_from([0.0, 30.0, 90.0]))
+@settings(max_examples=25, deadline=None)
+def test_property_walks_well_formed(n, m, k, h):
+    topo = make_topology("expander3", n)
+    rng = np.random.default_rng(0)
+    strag = StragglerModel(h_percent=h, mode="truncate")
+    plan = sample_walks(topo, m, k, rng, straggler=strag)
+    assert plan.devices.shape == (m, k)
+    assert (plan.devices >= 0).all() and (plan.devices < n).all()
+    assert (plan.k_m >= 1).all()
+    assert (plan.mask.sum(axis=1) == plan.k_m).all()
+    assert plan.last_device.shape == (m,)

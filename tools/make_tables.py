@@ -1,0 +1,35 @@
+"""Render EXPERIMENTS.md tables from results/*.json dry-run outputs.
+
+  PYTHONPATH=src python tools/make_tables.py results/dryrun_single_pod.json
+"""
+import json
+import sys
+
+
+def fmt_table(path: str) -> str:
+    rs = json.load(open(path))
+    lines = [
+        "| arch | shape | window | dominant | compute (ms) | memory (ms) | "
+        "collective (ms) | HLO GF/chip | HLO GB/chip | coll GB/chip | "
+        "6ND/HLO | peak GB/dev |",
+        "|---|---|---|---|---:|---:|---:|---:|---:|---:|---:|---:|",
+    ]
+    for r in rs:
+        rl = r["roofline"]
+        win = r.get("sliding_window") or "full"
+        peak = r["bytes_per_device"].get("temp", 0) / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {win} | **{rl['dominant']}** | "
+            f"{rl['compute_s']*1e3:.1f} | {rl['memory_s']*1e3:.1f} | "
+            f"{rl['collective_s']*1e3:.2f} | {rl['hlo_flops_per_chip']/1e9:.0f} | "
+            f"{rl['hlo_bytes_per_chip']/1e9:.0f} | "
+            f"{rl['collective_bytes_per_chip']/1e9:.2f} | "
+            f"{rl['useful_flops_ratio']:.3f} | {peak:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    for p in sys.argv[1:]:
+        print(f"\n### {p}\n")
+        print(fmt_table(p))
