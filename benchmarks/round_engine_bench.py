@@ -1,0 +1,241 @@
+"""Round-engine benchmark: seed (reference) vs flat-buffer DFedRW engine.
+
+Times one communication round end to end (host planning + jitted round) at
+the ISSUE-1 operating point — n=100 devices, M=8 chains, K=8 walk steps,
+fnn_mnist 2FNN, complete graph — for fp32 DFedRW and 8-bit QDFedRW, plus a
+microbenchmark of the quantization path itself: the seed's per-leaf /
+per-message threefry loop against ONE fused Pallas segment-kernel call on an
+identical round payload.
+
+Engines are timed interleaved round-by-round (this container is cgroup
+CPU-throttled; interleaving keeps the comparison fair under noise) and the
+median is reported. Results go to BENCH_round_engine.json at the repo root
+and as `name,us_per_call,derived` CSV rows.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, load_data
+from repro.core import DFedRW, DFedRWConfig, QuantConfig, make_topology
+from repro.core.flatten import make_flat_spec
+from repro.core.heterogeneity import partition_similarity
+from repro.core.quantization import dequantize, quantize
+from repro.data import FederatedDataset, synthetic_image_classification
+from repro.kernels.quantize import payload_quantize_dequantize
+from repro.models import make_fnn
+
+N_DEV, M_CHAINS, K_WALK = 100, 8, 8
+ROUNDS = int(os.environ.get("REPRO_BENCH_ROUNDS", 12))
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_round_engine.json")
+
+
+def _setup():
+    x, y = synthetic_image_classification(n_samples=8000, seed=0, noise=2.0)
+    part = partition_similarity(y, N_DEV, 50, np.random.default_rng(7))
+    data = FederatedDataset.from_partition(x, y, part)
+    topo = make_topology("complete", N_DEV)
+    model = make_fnn((100,))  # fnn_mnist 2FNN
+    return data, topo, model
+
+
+def _make_runner(model, data, topo, engine, bits):
+    cfg = DFedRWConfig(m_chains=M_CHAINS, k_walk=K_WALK,
+                       quant=QuantConfig(bits=bits), engine=engine, seed=3)
+    runner = DFedRW(model, data, topo, cfg)
+    state = runner.init_state(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    key, sub = jax.random.split(key)
+    state, _ = runner.run_round(state, sub)  # compile
+    jax.block_until_ready(state.device_params)
+    return {"runner": runner, "state": state, "key": key, "times": []}
+
+
+def _bench_round_pair(model, data, topo, bits):
+    """Interleaved per-round timing of both engines at one bit width.
+
+    The container runs under a cgroup CPU quota, so sustained measurement
+    gets throttled; a short sleep before each timed round lets the quota
+    refill and the per-engine MIN approximates the unthrottled latency
+    (median also reported)."""
+    slots = {e: _make_runner(model, data, topo, e, bits)
+             for e in ("reference", "flat")}
+    for _ in range(ROUNDS):
+        for s in slots.values():
+            time.sleep(0.15)
+            t0 = time.perf_counter()
+            s["key"], sub = jax.random.split(s["key"])
+            s["state"], _ = s["runner"].run_round(s["state"], sub)
+            jax.block_until_ready(s["state"].device_params)
+            s["times"].append(time.perf_counter() - t0)
+    out = {e: {"ms_per_round_median": float(np.median(s["times"]) * 1e3),
+               "ms_per_round_min": float(np.min(s["times"]) * 1e3),
+               "trace_count": s["runner"].trace_count}
+           for e, s in slots.items()}
+    out["speedup_flat_vs_reference"] = (
+        out["reference"]["ms_per_round_min"] / out["flat"]["ms_per_round_min"]
+    )
+    return out
+
+
+def _time(fn, *args, reps=8):
+    o = fn(*args)
+    jax.block_until_ready(o)
+    best = np.inf
+    for _ in range(6):
+        time.sleep(0.3)  # let the cgroup CPU quota refill
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            o = fn(*args)
+        jax.block_until_ready(o)
+        best = min(best, (time.perf_counter() - t0) / reps)
+    return float(best * 1e3)
+
+
+def _bench_quantize_path(model, bits=8):
+    """The ISSUE's hot path in isolation: QDFedRW's per-hop quantization of
+    the M-chain diff payload. Seed form: a per-leaf Python loop of pure-jnp
+    `quantize`/`dequantize` with threefry uniforms (exactly what the seed
+    round engine runs K times per round). Fused form: ONE Pallas segment
+    kernel call on the flat payload (counter RNG in registers). Also times
+    the aggregation-scale payload (K*M broadcast messages, Eq. 14)."""
+    spec = make_flat_spec(jax.eval_shape(model.init, jax.random.PRNGKey(0)))
+    abstract = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    qcfg = QuantConfig(bits=bits)
+    from repro.core.flatten import flatten_tree
+
+    def make_payload(n_msgs):
+        tree = jax.tree_util.tree_map(
+            lambda s: jnp.asarray(
+                rng.normal(size=(n_msgs, *s.shape)).astype(np.float32) * 0.01),
+            abstract)
+        return tree, flatten_tree(tree, spec)
+
+    results = {}
+
+    # --- hop payload: one wire tensor per leaf spanning all M chains.
+    hop_tree, hop_flat = make_payload(M_CHAINS)
+
+    @jax.jit
+    def hop_seed(tree, key):
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        keys = jax.random.split(key, len(leaves))
+        out = [dequantize(quantize(leaf, qcfg, lk)).reshape(leaf.shape)
+               for leaf, lk in zip(leaves, keys)]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    @jax.jit
+    def hop_fused(flat, key):
+        return payload_quantize_dequantize(flat, spec, per_message=False,
+                                           bits=bits, key=key)
+
+    key = jax.random.PRNGKey(5)
+    results["hop"] = {
+        "per_leaf_loop_ms": _time(hop_seed, hop_tree, key, reps=16),
+        "fused_pallas_ms": _time(hop_fused, hop_flat, key, reps=16),
+        "payload": {"messages": M_CHAINS, "d_params": spec.d, "bits": bits,
+                    "calls_per_round": K_WALK},
+    }
+    results["hop"]["speedup"] = (results["hop"]["per_leaf_loop_ms"]
+                                 / results["hop"]["fused_pallas_ms"])
+
+    # --- aggregation payload: one wire tensor per (message, leaf).
+    n_msgs = K_WALK * M_CHAINS
+    agg_tree, agg_flat = make_payload(n_msgs)
+
+    @jax.jit
+    def agg_seed(tree, key):
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        keys = jax.random.split(key, len(leaves))
+        out = []
+        for leaf, lk in zip(leaves, keys):
+            rks = jax.random.split(lk, leaf.shape[0])
+            out.append(jax.vmap(
+                lambda d, kk: dequantize(quantize(d, qcfg, kk)).reshape(d.shape)
+            )(leaf, rks))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    @jax.jit
+    def agg_fused(flat, key):
+        return payload_quantize_dequantize(flat, spec, per_message=True,
+                                           bits=bits, key=key)
+
+    results["aggregation"] = {
+        "per_leaf_loop_ms": _time(agg_seed, agg_tree, key),
+        "fused_pallas_ms": _time(agg_fused, agg_flat, key),
+        "payload": {"messages": n_msgs, "d_params": spec.d, "bits": bits,
+                    "calls_per_round": 1},
+    }
+    results["aggregation"]["speedup"] = (
+        results["aggregation"]["per_leaf_loop_ms"]
+        / results["aggregation"]["fused_pallas_ms"])
+    return results
+
+
+def run() -> None:
+    data, topo, model = _setup()
+    report = {
+        "config": {"n": N_DEV, "m_chains": M_CHAINS, "k_walk": K_WALK,
+                   "model": "fnn_mnist_2fnn", "batch_size": 50,
+                   "rounds_timed": ROUNDS, "backend": jax.default_backend()},
+        "round_wall_clock": {},
+    }
+    qp = _bench_quantize_path(model)
+    report["quantize_path"] = qp
+    for bits in (32, 8):
+        res = _bench_round_pair(model, data, topo, bits)
+        report["round_wall_clock"][f"bits{bits}"] = res
+        for eng in ("reference", "flat"):
+            emit(f"round_engine/{eng}_bits{bits}",
+                 res[eng]["ms_per_round_median"] * 1e3,
+                 f"min_ms={res[eng]['ms_per_round_min']:.1f}")
+        emit(f"round_engine/speedup_bits{bits}", 0.0,
+             f"{res['speedup_flat_vs_reference']:.2f}x")
+    # The quantization path in situ: QDFedRW overhead on top of the fp32
+    # round, per engine (the SGD gradient work is identical in both engines
+    # and at both bit widths, so the bits8 - bits32 difference isolates what
+    # this PR rewrote: hop + aggregation quantization).
+    rw = report["round_wall_clock"]
+    overhead = {}
+    for eng in ("reference", "flat"):
+        overhead[eng] = {
+            stat: max(rw["bits8"][eng][f"ms_per_round_{stat}"]
+                      - rw["bits32"][eng][f"ms_per_round_{stat}"], 1e-9)
+            for stat in ("median", "min")
+        }
+    overhead["speedup_flat_vs_reference"] = {
+        stat: overhead["reference"][stat] / overhead["flat"][stat]
+        for stat in ("median", "min")
+    }
+    report["qdfedrw_quant_overhead_per_round_ms"] = overhead
+    emit("round_engine/quant_overhead_reference", overhead["reference"]["median"] * 1e3, "")
+    emit("round_engine/quant_overhead_flat", overhead["flat"]["median"] * 1e3,
+         f"{overhead['speedup_flat_vs_reference']['median']:.2f}x")
+    for part in ("hop", "aggregation"):
+        emit(f"round_engine/quantize_{part}_per_leaf",
+             qp[part]["per_leaf_loop_ms"] * 1e3, "")
+        emit(f"round_engine/quantize_{part}_fused",
+             qp[part]["fused_pallas_ms"] * 1e3, f"{qp[part]['speedup']:.2f}x")
+    report["notes"] = (
+        "Timed on a cgroup-throttled 2-core CPU VM (interpret-mode Pallas); "
+        "absolute times vary ~2x with ambient load, ratios within one "
+        "interleaved run are stable. The full-round gap is bounded by the "
+        "SGD gradient compute shared identically by both engines (~60% of "
+        "the fp32 round); qdfedrw_quant_overhead_per_round_ms isolates the "
+        "path this PR rewrote. The standalone quantize_path micro-times are "
+        "the most load-sensitive numbers here."
+    )
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"# wrote {os.path.abspath(OUT_PATH)}", flush=True)
+
+
+if __name__ == "__main__":
+    run()

@@ -24,6 +24,7 @@ MODULES = [
     "fig13_language_model",
     "table4_latency",
     "prop1_quant_saving",
+    "round_engine_bench",
     "pod_gossip_roofline",
 ]
 

@@ -2,6 +2,7 @@
 from repro.core.graph import Topology, make_topology
 from repro.core.walk import WalkPlan, sample_walks, StragglerModel
 from repro.core.quantization import QuantConfig, Quantized, quantize, dequantize
+from repro.core.flatten import FlatSpec, flatten_tree, make_flat_spec, unflatten_tree
 from repro.core.dfedrw import DFedRW, DFedRWConfig, DFedRWState
 from repro.core.baselines import BaselineConfig, FedAvg, DFedAvg, DSGD
 from repro.core.metrics import History, train_loop
@@ -10,6 +11,7 @@ __all__ = [
     "Topology", "make_topology",
     "WalkPlan", "sample_walks", "StragglerModel",
     "QuantConfig", "Quantized", "quantize", "dequantize",
+    "FlatSpec", "flatten_tree", "make_flat_spec", "unflatten_tree",
     "DFedRW", "DFedRWConfig", "DFedRWState",
     "BaselineConfig", "FedAvg", "DFedAvg", "DSGD",
     "History", "train_loop",

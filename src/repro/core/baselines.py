@@ -2,12 +2,15 @@
 (momentum-free DFedAvgM, which DFedRW reduces to when all walk steps are
 self-loops), and DSGD.
 
+Like the DFedRW engine, the baselines run on the flat parameter buffer
+(repro.core.flatten): device models are rows of one (n, d_pad) matrix, the
+local-epoch loop is a scan of vmapped flat gradients, and QDFedAvg's
+aggregation diffs (Fig. 9) quantize through the fused segment Pallas kernel
+instead of a per-leaf Python loop.
+
 All baselines *drop stragglers* (the paper's point of contrast): under h%
 system heterogeneity, straggler devices neither update nor contribute to
 aggregation in that round.
-
-Quantized DFedAvg (QDFedAvg, Fig. 9) quantizes the aggregation diffs only
-(its walks are local, so there are no hand-off payloads).
 """
 from __future__ import annotations
 
@@ -19,15 +22,39 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dfedrw import DFedRWState, RoundMetrics, _stack_params
+from repro.core.dfedrw import DFedRWState, RoundMetrics
+from repro.core.flatten import (
+    flatten_tree,
+    make_flat_spec,
+    unflatten_tree,
+)
 from repro.core.graph import Topology
-from repro.core.quantization import QuantConfig, dequantize, quantize, wire_bits
+from repro.core.quantization import QuantConfig, wire_bits
 from repro.core.walk import StragglerModel
 from repro.data.synthetic import FederatedDataset
+from repro.kernels.quantize import payload_quantize_dequantize
 from repro.models.fnn import SmallModel
 from repro.optim.sgd import decreasing_lr
 
 __all__ = ["BaselineConfig", "FedAvg", "DFedAvg", "DSGD"]
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "quant"))
+def _quant_agg(buf, start_buf, agg_rows, agg_w, sel_j, key, *, spec, quant):
+    """Eq. 14 with quantized diffs: one fused segment-kernel call for the
+    whole (S * n_agg)-message payload (QDFedAvg, Fig. 9)."""
+    a, g = agg_rows.shape
+    diffs = buf[agg_rows] - start_buf[agg_rows]                 # (S, n_agg, d_pad)
+    deq = payload_quantize_dequantize(
+        diffs.reshape(a * g, spec.d_pad),
+        spec,
+        per_message=True,
+        bits=quant.bits,
+        s=quant.s,
+        key=key,
+    ).reshape(a, g, spec.d_pad)
+    upd = jnp.sum(agg_w[..., None] * deq, axis=1)
+    return buf.at[sel_j].set(start_buf[sel_j] + upd)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,48 +81,47 @@ class _Base:
         self.rng = np.random.default_rng(cfg.seed)
         self._x = jnp.asarray(data.x)
         self._y = jnp.asarray(data.y)
+        self.flat_spec = make_flat_spec(
+            jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        )
+        self._loss_flat = lambda vec, batch: model.loss_fn(
+            unflatten_tree(vec, self.flat_spec), batch
+        )
         self._local_fn = self._build_local_fn()
 
     def init_state(self, key: jax.Array) -> DFedRWState:
-        params = self.model.init(key)
+        vec = flatten_tree(self.model.init(key), self.flat_spec)
         return DFedRWState(
-            device_params=_stack_params(params, self.topo.n),
+            device_params=jnp.repeat(vec[None, :], self.topo.n, axis=0),
             updated=np.zeros(self.topo.n, dtype=bool),
         )
 
     def _build_local_fn(self):
-        model = self.model
         cfg = self.cfg
-        grad_fn = jax.grad(model.loss_fn)
+        grad_fn = jax.vmap(jax.grad(self._loss_flat))
 
         @jax.jit
         def local_updates(params_sel, batch_idx, kbar0):
-            """params_sel: (S, ...); batch_idx: (S, E, B). With
+            """params_sel: (S, d_pad); batch_idx: (S, E, B). With
             cfg.momentum > 0 this is DFedAvgM's local loop [15]."""
             x, y = self._x, self._y
-            vel0 = jax.tree_util.tree_map(jnp.zeros_like, params_sel)
+            vel0 = jnp.zeros_like(params_sel)
+            xb_all = jnp.swapaxes(x[batch_idx], 0, 1)   # (E, S, B, ...)
+            yb_all = jnp.swapaxes(y[batch_idx], 0, 1)
 
             def body(carry, inputs):
                 p, vel = carry
-                bidx_e, step_e = inputs
+                xb, yb, step_e = inputs
                 lr = decreasing_lr(kbar0 + step_e + 1, cfg.lr_r, cfg.lr_q)
-                xb, yb = x[bidx_e], y[bidx_e]  # (S, B, ...)
-
-                def one(pp, vv, xx, yy):
-                    g = grad_fn(pp, (xx, yy))
-                    vv = jax.tree_util.tree_map(
-                        lambda v, gg: cfg.momentum * v + gg, vv, g)
-                    return jax.tree_util.tree_map(lambda a, b: a - lr * b, pp, vv)
-
-                newp = jax.vmap(one)(p, vel, xb, yb)
-                newv = jax.tree_util.tree_map(
-                    lambda np_, op, v: jnp.where(cfg.momentum > 0, (op - np_) / jnp.maximum(lr, 1e-12), v),
-                    newp, p, vel)
+                g = grad_fn(p, (xb, yb))
+                vel_new = cfg.momentum * vel + g
+                newp = p - lr * vel_new
+                newv = jnp.where(cfg.momentum > 0, vel_new, vel)
                 return (newp, newv), None
 
             steps = jnp.arange(batch_idx.shape[1], dtype=jnp.int32)
             (out, _), _ = jax.lax.scan(body, (params_sel, vel0),
-                                       (jnp.swapaxes(batch_idx, 0, 1), steps))
+                                       (xb_all, yb_all, steps))
             return out
 
         return local_updates
@@ -125,20 +151,22 @@ class _Base:
         )
 
     def _batches(self, sel: np.ndarray, epochs: int) -> np.ndarray:
+        """(S, E, B) global sample indices: one rng draw + fancy indexing."""
         cfg = self.cfg
-        bidx = np.zeros((len(sel), epochs, cfg.batch_size), dtype=np.int64)
-        for si, dev in enumerate(sel):
-            row = self.data.client_idx[dev]
-            for e in range(epochs):
-                bidx[si, e] = row[self.rng.integers(0, row.shape[0], size=cfg.batch_size)]
-        return bidx
+        idx_mat = self.data.client_idx                       # (n, max_size)
+        cols = self.rng.integers(
+            0, idx_mat.shape[1], size=(len(sel), epochs, cfg.batch_size)
+        )
+        return idx_mat[np.asarray(sel)[:, None, None], cols]
 
     def evaluate(self, state: DFedRWState, x_test, y_test, max_batch: int = 2048) -> dict:
         if state.updated is not None and state.updated.any():
             sel = jnp.asarray(np.nonzero(state.updated)[0])
-            mean_params = jax.tree_util.tree_map(lambda p: jnp.mean(p[sel], axis=0), state.device_params)
         else:
-            mean_params = jax.tree_util.tree_map(lambda p: jnp.mean(p, axis=0), state.device_params)
+            sel = jnp.arange(self.topo.n)
+        mean_params = unflatten_tree(
+            jnp.mean(state.device_params[sel], axis=0), self.flat_spec
+        )
         x_test = jnp.asarray(x_test[:max_batch])
         y_test = jnp.asarray(y_test[:max_batch])
         logits = self.model.predict(mean_params, x_test)
@@ -149,7 +177,7 @@ class _Base:
 
     def _mean_loss(self, params_sel, bidx_last) -> float:
         xb, yb = self._x[bidx_last], self._y[bidx_last]
-        losses = jax.vmap(self.model.loss_fn)(params_sel, (xb, yb))
+        losses = jax.vmap(self._loss_flat)(params_sel, (xb, yb))
         return float(jnp.mean(losses))
 
 
@@ -160,24 +188,18 @@ class FedAvg(_Base):
     def run_round(self, state: DFedRWState, key: jax.Array) -> tuple[DFedRWState, RoundMetrics]:
         cfg = self.cfg
         # Global model = row 0 (all rows kept in sync).
-        global_params = jax.tree_util.tree_map(lambda p: p[0], state.device_params)
         sel = self._select()
         if len(sel) == 0:
             return self._skip_round(state)
         bidx = self._batches(sel, cfg.local_epochs)
-        params_sel = jax.tree_util.tree_map(
-            lambda p: jnp.broadcast_to(p, (len(sel), *p.shape)), global_params
-        )
+        params_sel = jnp.repeat(state.device_params[:1], len(sel), axis=0)
         out = self._local_fn(params_sel, jnp.asarray(bidx), jnp.int32(state.global_step))
         sizes = self.data.client_sizes[sel].astype(np.float64)
         w = jnp.asarray((sizes / sizes.sum()).astype(np.float32))
-        new_global = jax.tree_util.tree_map(
-            lambda p: jnp.tensordot(w, p, axes=1), out
-        )
-        new_stack = _stack_params(new_global, self.topo.n)
+        new_global = w @ out                                   # (d_pad,)
+        new_stack = jnp.repeat(new_global[None, :], self.topo.n, axis=0)
         all_updated = np.ones(self.topo.n, dtype=bool)
-        d = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(new_global))
-        phi = wire_bits(d, cfg.quant.bits)
+        phi = wire_bits(self.flat_spec.d, cfg.quant.bits)
         tot = 2.0 * len(sel) * phi           # server <-> each selected device
         busiest = tot                         # the server is the busiest node
         new_state = DFedRWState(
@@ -201,23 +223,23 @@ class DFedAvg(_Base):
     """Decentralized FedAvg (DFedAvgM without momentum, [15]): every
     non-straggler device runs E local epochs on its *own* data, then
     aggregates with <= n_agg random graph neighbors (Eq. 11); optionally with
-    quantized diffs (QDFedAvg, Fig. 9)."""
+    quantized diffs (QDFedAvg, Fig. 9) through the fused segment kernel."""
 
     local_epochs_are_walks = False
 
     def run_round(self, state: DFedRWState, key: jax.Array) -> tuple[DFedRWState, RoundMetrics]:
         cfg = self.cfg
+        spec = self.flat_spec
         sel = self._select()
         if len(sel) == 0:
             return self._skip_round(state)
         bidx = self._batches(sel, cfg.local_epochs)
-        params_sel = jax.tree_util.tree_map(lambda p: p[jnp.asarray(sel)], state.device_params)
-        out = self._local_fn(params_sel, jnp.asarray(bidx), jnp.int32(state.global_step))
+        sel_j = jnp.asarray(sel)
+        out = self._local_fn(state.device_params[sel_j], jnp.asarray(bidx),
+                             jnp.int32(state.global_step))
 
         # Scatter updated params back, then neighbor aggregation among sel.
-        device_params = jax.tree_util.tree_map(
-            lambda buf, upd: buf.at[jnp.asarray(sel)].set(upd), state.device_params, out
-        )
+        device_params = state.device_params.at[sel_j].set(out)
         sizes = self.data.client_sizes
         sel_set = set(sel.tolist())
         rows, weights = [], []
@@ -233,42 +255,26 @@ class DFedAvg(_Base):
                 w = np.pad(w, (0, pad))
             rows.append(nbrs)
             weights.append(w)
-        agg_rows = jnp.asarray(np.stack(rows).astype(np.int32))
-        agg_w = jnp.asarray(np.stack(weights).astype(np.float32))
-        sel_j = jnp.asarray(sel)
+        row_mat = np.stack(rows)
+        w_mat = np.stack(weights)
+        agg_rows = jnp.asarray(row_mat.astype(np.int32))
+        agg_w = jnp.asarray(w_mat.astype(np.float32))
 
         if cfg.quant.enabled:
-            def agg_leaf(buf, start_buf, leaf_key):
-                diffs = buf[agg_rows] - start_buf[agg_rows]
-                flat = diffs.reshape((-1,) + diffs.shape[2:])
-                keys = jax.random.split(leaf_key, flat.shape[0])
-                qd = jax.vmap(lambda dd, kk: dequantize(quantize(dd, cfg.quant, kk)))(
-                    flat, keys
-                ).reshape(diffs.shape)
-                w = agg_w.reshape(agg_w.shape + (1,) * (diffs.ndim - 2))
-                upd = jnp.sum(w * qd, axis=1)
-                return buf.at[sel_j].set(start_buf[sel_j] + upd)
-
-            leaves_last, treedef = jax.tree_util.tree_flatten(device_params)
-            leaves_start = jax.tree_util.tree_leaves(state.device_params)
-            keys = jax.random.split(key, len(leaves_last))
-            new_leaves = [agg_leaf(a, b, kk) for a, b, kk in zip(leaves_last, leaves_start, keys)]
-            device_params = jax.tree_util.tree_unflatten(treedef, new_leaves)
+            device_params = _quant_agg(
+                device_params, state.device_params, agg_rows, agg_w, sel_j, key,
+                spec=spec, quant=cfg.quant,
+            )
         else:
-            def agg_leaf(buf):
-                gathered = buf[agg_rows]
-                w = agg_w.reshape(agg_w.shape + (1,) * (gathered.ndim - 2))
-                return buf.at[sel_j].set(jnp.sum(w * gathered, axis=1))
+            gathered = device_params[agg_rows]                  # (S, n_agg, d_pad)
+            avg = jnp.sum(agg_w[..., None] * gathered, axis=1)
+            device_params = device_params.at[sel_j].set(avg)
 
-            device_params = jax.tree_util.tree_map(agg_leaf, device_params)
-
-        d = sum(int(np.prod(l.shape[1:])) for l in jax.tree_util.tree_leaves(device_params))
-        phi = wire_bits(d, cfg.quant.bits)
-        per_dev = np.zeros(self.topo.n)
-        for r, i in enumerate(sel):
-            for j, w in zip(rows[r], weights[r]):
-                if w > 0 and j != i:
-                    per_dev[j] += phi
+        phi = wire_bits(spec.d, cfg.quant.bits)
+        sends = (w_mat > 0) & (row_mat != sel[:, None])
+        per_dev = np.bincount(
+            row_mat[sends].ravel(), minlength=self.topo.n
+        ).astype(np.float64) * phi
         tot, busiest = float(per_dev.sum()), float(per_dev.max())
         updated = (state.updated.copy() if state.updated is not None
                    else np.zeros(self.topo.n, dtype=bool))
@@ -288,7 +294,6 @@ class DFedAvg(_Base):
             comm_bits_busiest_round=busiest,
             gamma_hat=1.0,
         )
-
 
 class DSGD(_Base):
     """Decentralized SGD: one local step then neighbor mixing, every round."""

@@ -1,22 +1,40 @@
 """DFedRW and QDFedRW protocol engines (paper Alg. 1 / Alg. 2).
 
-Protocol-scale simulation: n federated clients live as a stacked pytree
-(leading axis n). Each communication round:
+Flat-buffer architecture
+------------------------
+The n federated client models live as ONE ``(n, d_pad)`` float32 matrix
+(``repro.core.flatten``): every leaf of the model pytree owns a 128-aligned
+column segment, so each protocol operation of a communication round is a
+single 2-D array op on that matrix:
 
-  1. Sample M Metropolis-Hastings random-walk chains (host-side, repro.core.walk),
-     with straggler-dependent variable lengths K_m (system heterogeneity).
-  2. Each chain starts from the model of its start device (w_i^{t,0}) and
-     performs masked random-walk SGD steps (Eq. 10) across the visited
-     devices' local data, with the paper's globally decreasing step size
-     eta^kbar, kbar = (t-1)K + k.
-  3. Every visited device retains its last updated parameters w_l^{t,last}
-     (scattered back during the scan, chain order breaking ties).
-  4. A random agg_fraction of devices performs decentralized weighted
-     averaging (Eq. 11) over participating graph neighbors N_A(i).
+  1. *Walk planning* (host, numpy, vectorized): M Metropolis-Hastings chains
+     with straggler-dependent lengths K_m (repro.core.walk), one
+     ``rng.integers`` draw for the whole (M, K, B) batch-index tensor.
+  2. *Chain SGD* (Eq. 10): the M chain models are M rows; each scan step is
+     one vmapped gradient on the flat vectors, masked by chain activity,
+     with the paper's globally decreasing step size eta^kbar.
+  3. *w^{t,last} scatter*: all active chains scatter their row into the
+     device matrix in one masked scatter; ties (two chains visiting the same
+     device in one step) break by chain order exactly like the sequential
+     reference (`flatten.masked_scatter_last_wins`).
+  4. *Aggregation* (Eq. 11 / Eq. 14): one gather of the (A, n_agg) neighbor
+     rows, one weighted sum, one scatter.
 
-QDFedRW (Alg. 2) additionally sends stochastically quantized parameter
-*differences* on every cross-device hop (Eq. 13) and in aggregation
-(Eq. 14), with wire-cost accounting per §IV-B.
+QDFedRW (Alg. 2) sends stochastically quantized parameter *differences* on
+every cross-device hop (Eq. 13) and in aggregation (Eq. 14). The flat engine
+runs the quantizer as ONE fused Pallas kernel call per payload
+(`repro.kernels.quantize.payload_quantize_dequantize`): per-leaf segments of
+the flat buffer carry their own adaptive grid (segment-wise norms), so the
+wire format is identical to the per-leaf reference in
+``repro.core.quantization`` — which stays the bit-exact oracle, validated by
+the parity tests in tests/test_flat_engine.py.
+
+``DFedRWConfig.engine`` selects the implementation: ``"flat"`` (default,
+vectorized + Pallas) or ``"reference"`` (the seed per-leaf/per-chain
+engine, kept as the numerical oracle and benchmark baseline). Both share the
+host-side planner, so seeded runs are comparable round by round. The flat
+round function donates the device matrix on accelerators and guards against
+shape-induced retraces (aggregation plans are padded to fixed shapes).
 
 The per-round inner loop is jitted once per (M, K, batch) shape; walk plans
 and data gathers are cheap host-side numpy.
@@ -25,16 +43,25 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.flatten import (
+    FlatSpec,
+    elect_writers,
+    flatten_tree,
+    make_flat_spec,
+    unflatten_tree,
+)
 from repro.core.graph import Topology
 from repro.core.quantization import QuantConfig, dequantize, quantize, wire_bits
 from repro.core.walk import StragglerModel, WalkPlan, sample_walks
 from repro.data.synthetic import FederatedDataset
+from repro.kernels.quantize import payload_quantize_dequantize
 from repro.models.fnn import SmallModel
 from repro.optim.sgd import decreasing_lr
 
@@ -54,12 +81,14 @@ class DFedRWConfig:
     straggler: StragglerModel = dataclasses.field(default_factory=StragglerModel)
     chain_mode: bool = False        # large-scale LM mode (§VI-F): aggregate the
                                     # M chain-end models; chains persist across rounds
+    engine: str = "flat"            # "flat" (vectorized + Pallas) | "reference"
     seed: int = 0
 
 
 @dataclasses.dataclass
 class DFedRWState:
-    device_params: Any              # pytree, leaves (n, ...)
+    device_params: Any              # flat engine: (n, d_pad) matrix;
+                                    # reference engine: pytree, leaves (n, ...)
     round: int = 0
     global_step: int = 0            # kbar counter
     chain_starts: np.ndarray | None = None  # chain mode: i_m^{t,0}
@@ -84,6 +113,24 @@ def _stack_params(params: Any, n: int) -> Any:
     return jax.tree_util.tree_map(lambda p: jnp.broadcast_to(p, (n, *p.shape)).copy(), params)
 
 
+def gamma_hat_from_traj(grad_sq_traj: jax.Array, walk_mask: jax.Array) -> jax.Array:
+    """Lemma-1 estimate ||g_last|| / ||g_first|| averaged over chains.
+
+    Chains whose walk mask is entirely False performed no step this round;
+    their g_last/g0 ratio is computed from pre-masking gradients and is pure
+    noise, so they are excluded from the mean (a fully-masked chain can arise
+    under custom straggler models even though `chain_lengths` floors K_m at 1).
+    """
+    m = walk_mask.shape[0]
+    active_steps = jnp.sum(walk_mask, axis=1)                      # (M,)
+    g0 = jnp.sqrt(grad_sq_traj[0] + 1e-12)
+    k_last = jnp.maximum(active_steps - 1, 0)
+    g_last = jnp.sqrt(grad_sq_traj[k_last, jnp.arange(m)] + 1e-12)
+    alive = active_steps > 0
+    ratios = jnp.where(alive, g_last / g0, 0.0)
+    return jnp.sum(ratios) / jnp.maximum(jnp.sum(alive), 1)
+
+
 class DFedRW:
     """Runner binding (model, dataset, topology, config)."""
 
@@ -95,6 +142,7 @@ class DFedRW:
         cfg: DFedRWConfig,
     ):
         assert data.n_clients == topo.n, "dataset clients must match graph size"
+        assert cfg.engine in ("flat", "reference"), cfg.engine
         self.model = model
         self.data = data
         self.topo = topo
@@ -102,7 +150,15 @@ class DFedRW:
         self.rng = np.random.default_rng(cfg.seed)
         self._x = jnp.asarray(data.x)
         self._y = jnp.asarray(data.y)
-        self._round_fn = self._build_round_fn()
+        self.flat_spec: FlatSpec = make_flat_spec(
+            jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        )
+        self._trace_count = 0
+        self._retrace_warned = False
+        if cfg.engine == "flat":
+            self._round_fn = self._build_round_fn_flat()
+        else:
+            self._round_fn = self._build_round_fn_reference()
 
     # ------------------------------------------------------------------ init
     def init_state(self, key: jax.Array) -> DFedRWState:
@@ -110,14 +166,164 @@ class DFedRW:
         starts = None
         if self.cfg.chain_mode:
             starts = self.rng.integers(0, self.topo.n, size=self.cfg.m_chains)
+        if self.cfg.engine == "flat":
+            vec = flatten_tree(params, self.flat_spec)
+            device_params = jnp.repeat(vec[None, :], self.topo.n, axis=0)
+        else:
+            device_params = _stack_params(params, self.topo.n)
         return DFedRWState(
-            device_params=_stack_params(params, self.topo.n),
+            device_params=device_params,
             chain_starts=starts,
             updated=np.zeros(self.topo.n, dtype=bool),
         )
 
-    # -------------------------------------------------------------- jit core
-    def _build_round_fn(self):
+    @property
+    def trace_count(self) -> int:
+        """How many times the round function has been (re)traced."""
+        return self._trace_count
+
+    def params_pytree(self, state: DFedRWState) -> Any:
+        """The stacked per-device model pytree, independent of engine."""
+        if self.cfg.engine == "flat":
+            return unflatten_tree(state.device_params, self.flat_spec)
+        return state.device_params
+
+    # ---------------------------------------------------------- flat engine
+    def _build_round_fn_flat(self):
+        cfg = self.cfg
+        model = self.model
+        spec = self.flat_spec
+        d_pad = spec.d_pad
+
+        def loss_flat(vec, batch):
+            return model.loss_fn(unflatten_tree(vec, spec), batch)
+
+        grad_fn = jax.vmap(jax.grad(loss_flat))
+
+        donate = () if jax.default_backend() == "cpu" else (0,)
+
+        @functools.partial(jax.jit, donate_argnums=donate)
+        def round_fn(
+            device_flat,              # (n, d_pad) f32 — donated off-CPU
+            walk_devices,             # (M, K) int32
+            walk_mask,                # (M, K) bool
+            batch_idx,                # (M, K, B) int64 into global data
+            agg_rows,                 # (A, n_agg) int32 neighbor ids per aggregator
+            agg_weights,              # (A, n_agg) f32 (n_l/m, zero-padded)
+            agg_devices,              # (A,) int32 aggregating device ids (n = pad)
+            kbar0,                    # scalar int32: global step before round
+            qkey,                     # PRNG key for quantization
+        ):
+            self._trace_count += 1    # python side effect: fires on (re)trace only
+            x, y = self._x, self._y
+            m, k = walk_devices.shape
+
+            n_dev = device_flat.shape[0]
+            chain_flat = device_flat[walk_devices[:, 0]]       # (M, d_pad)
+            bidx_t = jnp.swapaxes(batch_idx, 0, 1)             # (K, M, B) ints
+            xb_all = x[bidx_t]                                 # (K, M, B, ...)
+            yb_all = y[bidx_t]
+
+            def scan_body(carry, inputs):
+                chain_flat, qkey = carry
+                xb, yb, step_k = inputs
+                lr = decreasing_lr(kbar0 + step_k + 1, cfg.lr_r, cfg.lr_q)
+                grads = grad_fn(chain_flat, (xb, yb))          # (M, d_pad)
+                mask_k = walk_mask[:, step_k]
+                stepped = jnp.where(
+                    mask_k[:, None], chain_flat - lr * grads, chain_flat
+                )
+                # QDFedRW: the hand-off to the next device transmits
+                # Q(w^{k+1} - w^k) with one wire tensor per leaf (Eq. 13);
+                # the receiver reconstructs w^k + deq(Q(diff)) in the same
+                # fused kernel pass.
+                if cfg.quant.enabled:
+                    qkey, sub = jax.random.split(qkey)
+                    stepped = payload_quantize_dequantize(
+                        stepped - chain_flat,
+                        spec,
+                        per_message=False,
+                        bits=cfg.quant.bits,
+                        s=cfg.quant.s,
+                        key=sub,
+                        base=chain_flat,
+                    )
+                return (stepped, qkey), (stepped, jnp.sum(grads * grads, axis=1))
+
+            steps = jnp.arange(k, dtype=jnp.int32)
+            # Full unroll: K is small (a handful of walk steps) and the
+            # rolled-loop form costs 5-8x per step on CPU — XLA can neither
+            # fuse across the while-loop boundary nor keep the Pallas call's
+            # buffers in place.
+            (chain_flat, qkey), (traj, grad_sq_traj) = jax.lax.scan(
+                scan_body,
+                (chain_flat, qkey),
+                (xb_all, yb_all, steps),
+                unroll=True,
+            )
+
+            # w^{t,last} scatter, ONCE per round over the whole trajectory:
+            # nothing reads the device matrix during the walk, so the
+            # sequential per-step scatters collapse into one winner election
+            # (priorities replay the (step, chain) write order) plus one
+            # unique-row scatter.
+            traj2 = traj.reshape(k * m, d_pad)
+            devs_flat = walk_devices.T.reshape(-1)             # step-major
+            mask_flat = walk_mask.T.reshape(-1)
+            _, wins = elect_writers(devs_flat, mask_flat, n_dev)
+            # losers target distinct OOB rows: dropped, and index uniqueness
+            # holds honestly for the scatter fast path
+            loser_oob = n_dev + jnp.arange(k * m, dtype=devs_flat.dtype)
+            dev_last = device_flat.at[jnp.where(wins, devs_flat, loser_oob)].set(
+                traj2, mode="drop", unique_indices=True
+            )
+
+            gamma_hat = gamma_hat_from_traj(grad_sq_traj, walk_mask)
+
+            # Decentralized aggregation (Eq. 11 / Eq. 14); padded aggregator
+            # slots carry device ids >= n and zero weights -> dropped.
+            if cfg.quant.enabled:
+                # Eq. 14 payload: one broadcast message Q(w_l^{t,last} - w_l)
+                # per walk-updated device (non-updated neighbors have zero
+                # diffs, which quantize to zero — so only winner rows carry
+                # signal, and the payload is the trajectory itself). The
+                # aggregator weight matrix lands each message on every
+                # aggregator listing the sender.
+                qkey, sub = jax.random.split(qkey)
+                base_rows = device_flat[devs_flat]             # (K*M, d_pad)
+                diffs = jnp.where(wins[:, None], traj2 - base_rows, 0.0)
+                deq = payload_quantize_dequantize(
+                    diffs,
+                    spec,
+                    per_message=True,
+                    bits=cfg.quant.bits,
+                    s=cfg.quant.s,
+                    key=sub,
+                )
+                hits = agg_rows[:, :, None] == devs_flat[None, None, :]
+                w3 = (jnp.sum(agg_weights[:, :, None] * hits, axis=1)
+                      * wins[None, :].astype(jnp.float32))     # (A, K*M)
+                upd = w3 @ deq                                 # (A, d_pad)
+                base = device_flat[agg_devices]
+                new_device_flat = dev_last.at[agg_devices].set(
+                    base + upd, mode="drop", unique_indices=True
+                )
+            else:
+                gathered = dev_last[agg_rows]                  # (A, n_agg, d_pad)
+                avg = jnp.sum(agg_weights[..., None] * gathered, axis=1)
+                new_device_flat = dev_last.at[agg_devices].set(
+                    avg, mode="drop", unique_indices=True
+                )
+
+            # Mean train loss over the round's final chain models, on their
+            # last batch (cheap monitoring signal).
+            losses = jax.vmap(loss_flat)(chain_flat, (xb_all[-1], yb_all[-1]))
+            return new_device_flat, jnp.mean(losses), gamma_hat
+
+        return round_fn
+
+    # ----------------------------------------------- reference (seed) engine
+    def _build_round_fn_reference(self):
         cfg = self.cfg
         model = self.model
 
@@ -133,6 +339,7 @@ class DFedRW:
             kbar0,                    # scalar int32: global step before round
             qkey,                     # PRNG key for quantization
         ):
+            self._trace_count += 1
             x, y = self._x, self._y
             m, k = walk_devices.shape
 
@@ -140,7 +347,6 @@ class DFedRW:
             chain_params = jax.tree_util.tree_map(
                 lambda p: p[walk_devices[:, 0]], device_params
             )
-            start_params = chain_params  # for gamma-hat + aggregation diffs
             dev_last = device_params     # w_l^{t,last} buffer
 
             grad_fn = jax.grad(model.loss_fn)
@@ -216,13 +422,7 @@ class DFedRW:
                 (walk_devices.T, walk_mask.T, jnp.swapaxes(batch_idx, 0, 1), steps),
             )
 
-            # gamma-hat estimate (Lemma 1): ||g_last|| / ||g_first|| averaged over chains.
-            g0 = jnp.sqrt(grad_sq_traj[0] + 1e-12)
-            k_last = jnp.maximum(jnp.sum(walk_mask, axis=1) - 1, 0)  # (M,)
-            g_last = jnp.sqrt(
-                grad_sq_traj[k_last, jnp.arange(m)] + 1e-12
-            )
-            gamma_hat = jnp.mean(g_last / g0)
+            gamma_hat = gamma_hat_from_traj(grad_sq_traj, walk_mask)
 
             # Decentralized aggregation (Eq. 11 / Eq. 14).
             if cfg.quant.enabled:
@@ -238,7 +438,7 @@ class DFedRW:
                     w = agg_weights.reshape(agg_weights.shape + (1,) * (diffs.ndim - 2))
                     upd = jnp.sum(w * qd, axis=1)  # (A, ...)
                     base = start_buf[agg_devices]
-                    return buf.at[agg_devices].set(base + upd)
+                    return buf.at[agg_devices].set(base + upd, mode="drop")
 
                 leaves_last, treedef = jax.tree_util.tree_flatten(dev_last)
                 leaves_start = jax.tree_util.tree_leaves(device_params)
@@ -256,7 +456,7 @@ class DFedRW:
                         agg_weights.shape + (1,) * (gathered.ndim - 2)
                     )
                     avg = jnp.sum(w * gathered, axis=1)
-                    return buf.at[agg_devices].set(avg)
+                    return buf.at[agg_devices].set(avg, mode="drop")
 
                 new_device_params = jax.tree_util.tree_map(agg_leaf, dev_last)
 
@@ -284,40 +484,46 @@ class DFedRW:
         # contributes a *partial* update (paper Table II row 4): it processes
         # only batch_size/slowdown distinct samples within the global clock
         # (realized by tiling a sub-batch, i.e. an unbiased smaller-batch
-        # gradient at unchanged shapes).
+        # gradient at unchanged shapes). One rng draw for the whole (M*K, B)
+        # column tensor; the dense (n, max_size) client index matrix turns it
+        # into global sample ids by fancy indexing.
         slow = cfg.straggler.slow_mask(topo.n)
         b_slow = max(1, int(cfg.batch_size / max(cfg.straggler.slowdown, 1.0)))
-        bidx = np.zeros((cfg.m_chains, cfg.k_walk, cfg.batch_size), dtype=np.int64)
-        for mm in range(cfg.m_chains):
-            for kk in range(cfg.k_walk):
-                dev = plan.devices[mm, kk]
-                row = self.data.client_idx[dev]
-                if slow[dev] and cfg.straggler.mode == "partial":
-                    sub = row[rng.integers(0, row.shape[0], size=b_slow)]
-                    reps = int(np.ceil(cfg.batch_size / b_slow))
-                    bidx[mm, kk] = np.tile(sub, reps)[: cfg.batch_size]
-                else:
-                    bidx[mm, kk] = row[rng.integers(0, row.shape[0], size=cfg.batch_size)]
+        flat_dev = plan.devices.reshape(-1)                       # (M*K,)
+        idx_mat = self.data.client_idx                            # (n, max_size)
+        cols = rng.integers(0, idx_mat.shape[1], size=(flat_dev.shape[0], cfg.batch_size))
+        bidx = idx_mat[flat_dev[:, None], cols]
+        if cfg.straggler.mode == "partial" and slow.any():
+            reps = int(np.ceil(cfg.batch_size / b_slow))
+            sub = idx_mat[flat_dev[:, None], cols[:, :b_slow]]
+            tiled = np.tile(sub, (1, reps))[:, : cfg.batch_size]
+            bidx = np.where(slow[flat_dev][:, None], tiled, bidx)
+        bidx = bidx.reshape(cfg.m_chains, cfg.k_walk, cfg.batch_size)
 
-        # Aggregation plan.
+        # Aggregation plan. Shapes are padded to fixed sizes (pad slots use
+        # device id n and zero weight; the jitted scatter drops them) so the
+        # round function compiles exactly once per config.
         participants = np.unique(plan.devices[plan.mask])
         sizes = self.data.client_sizes
         if cfg.chain_mode:
             # §VI-F: N_A(i) = the other chains' end devices; aggregators are
-            # exactly the chain-end devices.
+            # exactly the (unique) chain-end devices, padded to M rows.
             agg_devices = np.unique(plan.last_device)
-            rows, weights = [], []
-            for i in agg_devices:
-                nbrs = plan.last_device
-                w = sizes[nbrs].astype(np.float64)
-                rows.append(nbrs)
-                weights.append(w / w.sum())
-            n_agg = len(plan.last_device)
+            rows = np.tile(plan.last_device, (len(agg_devices), 1))
+            w = sizes[plan.last_device].astype(np.float64)
+            weights = np.tile(w / w.sum(), (len(agg_devices), 1))
+            pad = cfg.m_chains - len(agg_devices)
+            if pad > 0:
+                # Distinct out-of-range ids so the jitted scatter can keep
+                # its unique-indices fast path (all pad slots are dropped).
+                agg_devices = np.concatenate([agg_devices, topo.n + np.arange(pad)])
+                rows = np.pad(rows, ((0, pad), (0, 0)))
+                weights = np.pad(weights, ((0, pad), (0, 0)))
         else:
             n_aggregators = max(1, int(round(topo.n * cfg.agg_fraction)))
             agg_devices = rng.choice(topo.n, size=n_aggregators, replace=False)
             n_agg = cfg.n_agg
-            rows, weights = [], []
+            row_list, weight_list = [], []
             part_set = set(participants.tolist())
             for i in agg_devices:
                 nbrs = [j for j in self.topo.neighbors(i, include_self=True)
@@ -330,31 +536,34 @@ class DFedRW:
                 if pad > 0:
                     nbrs = np.pad(nbrs, (0, pad), constant_values=i)
                     w = np.pad(w, (0, pad))
-                rows.append(nbrs)
-                weights.append(w)
-        agg_rows = np.stack(rows).astype(np.int32)
-        agg_w = np.stack(weights).astype(np.float32)
+                row_list.append(nbrs)
+                weight_list.append(w)
+            rows = np.stack(row_list)
+            weights = np.stack(weight_list)
+        agg_rows = rows.astype(np.int32)
+        agg_w = weights.astype(np.float32)
         return plan, bidx, (agg_devices.astype(np.int32), agg_rows, agg_w)
 
     def _comm_cost_bits(self, plan: WalkPlan, agg: tuple, d_params: int) -> tuple[float, float]:
-        """Eq. 18 comm accounting. Returns (total_bits, busiest_device_bits)."""
+        """Eq. 18 comm accounting (vectorized: one bincount over hop edges and
+        one over aggregation sends). Returns (total_bits, busiest_device_bits)."""
         bits = self.cfg.quant.bits
-        per_dev = np.zeros(self.topo.n)
         hop_bits = wire_bits(d_params, bits)
-        # Walk hand-offs: each cross-device hop sends params (or quantized diff).
-        for mm in range(plan.m):
-            kk = int(plan.k_m[mm])
-            for step in range(kk - 1):
-                a, b = plan.devices[mm, step], plan.devices[mm, step + 1]
-                if a != b:
-                    per_dev[a] += hop_bits       # sender pays (send side)
+        n = self.topo.n
+        # Walk hand-offs: each cross-device hop sends params (or quantized
+        # diff); the sender pays (send side). Edge (k -> k+1) exists while
+        # step k+1 is inside the chain's realized length K_m.
+        src = plan.devices[:, :-1]
+        dst = plan.devices[:, 1:]
+        steps = np.arange(plan.k_max - 1)[None, :]
+        live = (steps + 1 < plan.k_m[:, None]) & (src != dst)
+        per_dev = np.bincount(src[live].ravel(), minlength=n).astype(np.float64)
         # Aggregation: each participating device l sends its (quantized diff)
         # model to the aggregators that list it.
         agg_devices, agg_rows, agg_w = agg
-        for r, i in enumerate(agg_devices):
-            for j, w in zip(agg_rows[r], agg_w[r]):
-                if w > 0 and j != i:
-                    per_dev[j] += hop_bits
+        sends = (agg_w > 0) & (agg_rows != agg_devices[:, None])
+        per_dev += np.bincount(agg_rows[sends].ravel(), minlength=n)
+        per_dev *= hop_bits
         return float(per_dev.sum()), float(per_dev.max())
 
     # ------------------------------------------------------------------- run
@@ -373,15 +582,18 @@ class DFedRW:
             jnp.int32(state.global_step),
             key,
         )
-        d_params = sum(
-            int(np.prod(l.shape[1:]))
-            for l in jax.tree_util.tree_leaves(state.device_params)
-        )
-        tot, busiest = self._comm_cost_bits(plan, agg, d_params)
+        if self._trace_count > 1 and not self._retrace_warned:
+            self._retrace_warned = True
+            warnings.warn(
+                "DFedRW round function retraced; a plan shape is not stable "
+                "across rounds (this forfeits compiled-executable reuse)",
+                stacklevel=2,
+            )
+        tot, busiest = self._comm_cost_bits(plan, agg, self.flat_spec.d)
         updated = (state.updated.copy() if state.updated is not None
                    else np.zeros(self.topo.n, dtype=bool))
         updated[np.unique(plan.devices[plan.mask])] = True
-        updated[agg_devices] = True
+        updated[agg_devices[agg_devices < self.topo.n]] = True
         new_state = DFedRWState(
             device_params=new_params,
             round=state.round + 1,
@@ -408,12 +620,15 @@ class DFedRW:
         and are not part of the learned model)."""
         if state.updated is not None and state.updated.any():
             sel = jnp.asarray(np.nonzero(state.updated)[0])
-            mean_params = jax.tree_util.tree_map(
-                lambda p: jnp.mean(p[sel], axis=0), state.device_params
+        else:
+            sel = jnp.arange(self.topo.n)
+        if self.cfg.engine == "flat":
+            mean_params = unflatten_tree(
+                jnp.mean(state.device_params[sel], axis=0), self.flat_spec
             )
         else:
             mean_params = jax.tree_util.tree_map(
-                lambda p: jnp.mean(p, axis=0), state.device_params
+                lambda p: jnp.mean(p[sel], axis=0), state.device_params
             )
         x_test = jnp.asarray(x_test[:max_batch])
         y_test = jnp.asarray(y_test[:max_batch])

@@ -9,10 +9,41 @@ b*d bits of indices+signs plus 32+32 bits of side information, i.e.
 QDFedRW quantizes parameter *differences* (Eq. 13/14), never raw weights,
 to avoid error accumulation in non-smooth nets; callers pass diffs.
 
+Segment wire format (flat-buffer engine)
+----------------------------------------
+The flat round engine (repro.core.dfedrw, engine="flat") ships a whole
+payload of models as one (B, d_pad) matrix in which every model-pytree leaf
+owns a 128-aligned column block (repro.core.flatten.FlatSpec). On the wire
+this is a sequence of per-leaf SEGMENTS, each an independent Eq. 12 tensor
+with its own (s, ||w_seg||) header:
+
+  * hop hand-off (Eq. 13): one segment per leaf, spanning all B chain rows
+    — exactly the seed semantics of quantizing the stacked (B, ...) leaf as
+    one tensor. Wire cost per hand-off: sum_l (64 + b*d_l) bits.
+  * aggregation (Eq. 14): one segment per (message row, leaf) — each
+    neighbor's diff quantizes its leaves separately, matching the seed's
+    per-row vmapped quantize. The flat engine quantizes each *sender's*
+    message once and broadcasts it to every aggregator listing the sender
+    (one wire message per updated device); Eq. 18 accounting still charges
+    every (sender -> aggregator) edge.
+
+  Padding lanes inside a segment hold exact zeros end to end: they quantize
+  to index 0 and never contribute to norms, so d in the cost accounting is
+  the TRUE parameter count (FlatSpec.d), not d_pad.
+
+Per segment the adaptive interval is s = max_v |w_v| / (||w_seg|| * levels)
+(see QuantConfig); `repro.kernels.quantize.payload_quantize_dequantize` runs
+the whole payload's quantize -> dequantize round trip as one fused Pallas
+kernel call with per-row (s, norm) operands.
+
 This module is the pure-jnp reference implementation; the Pallas TPU kernel
-in repro/kernels/quantize.py is bit-compatible (same grid, same rounding
+in repro/kernels/quantize/ is bit-compatible (same grid, same rounding
 given the same uniforms) and is validated against `quantize`/`dequantize`
-below.
+below (tests/test_kernels_quantize.py). The flat engine's kernel draws its
+stochastic-rounding uniforms from an in-register counter hash instead of
+the threefry stream (statistically equivalent, ~10x cheaper on CPU), so
+QDFedRW trajectories of the two engines agree to quantization noise rather
+than bit-for-bit; see tests/test_flat_engine.py.
 """
 from __future__ import annotations
 

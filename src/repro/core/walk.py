@@ -108,17 +108,17 @@ def sample_walks(
     else:
         start = np.asarray(start_devices, dtype=np.int64) % topo.n
     devices = np.zeros((m, k), dtype=np.int32)
-    P = topo.transition
     n = topo.n
-    cdf = np.cumsum(P, axis=1)
-    for c in range(m):
-        cur = int(start[c])
-        for step in range(k):
-            devices[c, step] = cur
-            # Inverse-CDF sample of the MH kernel row (includes self-loop mass).
-            u = rng.random()
-            cur = int(np.searchsorted(cdf[cur], u, side="right"))
-            cur = min(cur, n - 1)
+    cdf = np.cumsum(topo.transition, axis=1)
+    # All M chains advance together: one uniform draw per step, one
+    # inverse-CDF lookup on the M gathered kernel rows (vectorized
+    # searchsorted: count of cdf entries <= u, which includes the
+    # self-loop mass).
+    cur = start.astype(np.int64)
+    for step in range(k):
+        devices[:, step] = cur
+        u = rng.random(m)
+        cur = np.minimum((cdf[cur] <= u[:, None]).sum(axis=1), n - 1)
     k_m = (
         straggler.chain_lengths(devices, k, topo.n)
         if straggler is not None

@@ -1,0 +1,10 @@
+"""Multi-device distribution layer (pod-scale DFedRW, §VI-F direction).
+
+Currently provides `repro.dist.gossip`: host-side gossip mixing and walk
+permutation collectives over a mesh axis. Sharding rules
+(`repro.dist.sharding`) and step builders (`repro.dist.steps`) land in a
+later PR; tests guard their imports with `pytest.importorskip`.
+"""
+from repro.dist import gossip
+
+__all__ = ["gossip"]

@@ -1,0 +1,81 @@
+"""Fallback for the optional `hypothesis` dependency.
+
+This image does not ship hypothesis; importing it at module scope made four
+test modules uncollectable. When the real library is available it is used
+unchanged. Otherwise `given`/`settings`/`st` degrade to a deterministic
+emulation: the test is parametrized over `max_examples` seeded cases, each
+drawing its arguments from the (small) subset of the strategies API the
+suite uses. Coverage is weaker than real shrinking-based hypothesis, but
+the property still runs across a spread of inputs.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis exists
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import numpy as _np
+    import pytest
+
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: int(r.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(options):
+            opts = list(options)
+            return _Strategy(lambda r: opts[int(r.integers(0, len(opts)))])
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            # log-uniform over positive ranges (hypothesis also biases towards
+            # magnitude extremes), plain uniform otherwise
+            if min_value > 0:
+                lo, hi = _np.log(min_value), _np.log(max_value)
+                return _Strategy(lambda r: float(_np.exp(lo + (hi - lo) * r.random())))
+            return _Strategy(
+                lambda r: float(min_value + (max_value - min_value) * r.random())
+            )
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.integers(0, 2)))
+
+
+    st = _Strategies()
+
+
+    def settings(max_examples: int = 20, **_kw):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+
+    def given(**strategies):
+        def deco(fn):
+            n = getattr(fn, "_compat_max_examples", 20)
+
+            # no functools.wraps: pytest must see run's own (_compat_case)
+            # signature, not the property arguments it would mistake for
+            # fixtures.
+            def run(_compat_case):
+                rng = _np.random.default_rng(_compat_case * 9973 + 17)
+                draws = {k: s.draw(rng) for k, s in strategies.items()}
+                return fn(**draws)
+
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            return pytest.mark.parametrize("_compat_case", range(n))(run)
+
+        return deco

@@ -16,6 +16,10 @@ import textwrap
 
 import pytest
 
+pytest.importorskip("repro.dist.sharding",
+                    reason="repro.launch.dryrun needs repro.dist.sharding, "
+                           "which lands in a later PR")
+
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 _CORRECTION = textwrap.dedent("""

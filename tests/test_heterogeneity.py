@@ -1,7 +1,7 @@
 """Partitioner tests (paper §VI-A deterministic/probabilistic partitioning)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.heterogeneity import (
     delta_squared,

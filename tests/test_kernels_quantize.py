@@ -1,12 +1,22 @@
 """Pallas stochastic-quantization kernel vs pure-jnp oracle: shape/dtype/bits
-sweep in interpret mode (kernel body executes on CPU)."""
+sweep in interpret mode (kernel body executes on CPU), plus the per-row
+segment variants and the in-kernel counter RNG used by the flat round
+engine."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.quantize import stochastic_quantize, stochastic_dequantize
+from repro.core.flatten import make_flat_spec
+from repro.core.quantization import QuantConfig, dequantize, quantize
+from repro.kernels.quantize import (
+    payload_quantize_dequantize,
+    segment_quantize_dequantize,
+    stochastic_dequantize,
+    stochastic_quantize,
+)
 from repro.kernels.quantize.ref import dequantize_ref, quantize_ref
+from repro.models import make_fnn
 
 SHAPES = [(64,), (1000,), (128, 128), (64, 129), (3, 5, 7), (65536,), (2048, 33)]
 DTYPES = [jnp.float32, jnp.bfloat16]
@@ -54,3 +64,157 @@ def test_kernel_unbiased_statistically():
     bias = jnp.abs(acc / n - w).max()
     norm = float(jnp.linalg.norm(w))
     assert float(bias) < 5.0 * s * norm / 2.0 / np.sqrt(n)
+
+
+# ------------------------------------------------ segment / payload variants
+
+
+def _model_payload(b, seed=0, scale=0.05):
+    model = make_fnn((23,), in_dim=17, out_dim=5)
+    spec = make_flat_spec(jax.eval_shape(model.init, jax.random.PRNGKey(0)))
+    rng = np.random.default_rng(seed)
+    flat = jnp.asarray(rng.normal(size=(b, spec.d_pad)).astype(np.float32) * scale)
+    # zero the padding lanes, as the flat engine guarantees
+    mask = np.zeros(spec.d_pad, np.float32)
+    for off, size in zip(spec.offsets, spec.sizes):
+        mask[off:off + size] = 1.0
+    return spec, flat * jnp.asarray(mask)
+
+
+def test_segment_qdq_matches_per_leaf_oracle_given_same_uniforms():
+    """With explicit uniforms, the fused segment pass is (numerically) the
+    per-leaf reference: one wire tensor per leaf spanning all rows."""
+    from repro.core.flatten import LANES, flatten_tree, unflatten_tree
+
+    spec, flat = _model_payload(3)
+    key = jax.random.PRNGKey(42)
+    keys = jax.random.split(key, spec.n_leaves)
+    cfg = QuantConfig(bits=8)
+    tree = unflatten_tree(flat, spec)
+    oracle_leaves = [
+        dequantize(quantize(leaf, cfg, k), dtype=leaf.dtype)
+        for leaf, k in zip(jax.tree_util.tree_leaves(tree), keys)
+    ]
+    oracle = flatten_tree(
+        jax.tree_util.tree_unflatten(spec.treedef, oracle_leaves), spec
+    )
+    # matching uniforms: same per-leaf draws, padded into the flat layout
+    segs = []
+    for l in range(spec.n_leaves):
+        u = jax.random.uniform(keys[l], (3, spec.sizes[l]), dtype=jnp.float32)
+        segs.append(jnp.pad(u, ((0, 0), (0, spec.padded_sizes[l] - spec.sizes[l]))))
+    u_flat = jnp.concatenate(segs, axis=1)
+    rows = 3 * spec.rows
+    seg_ids = jnp.asarray(np.tile(spec.row_leaf_ids(), 3))
+    got = segment_quantize_dequantize(
+        flat.reshape(rows, LANES), u_flat.reshape(rows, LANES),
+        seg_ids, spec.n_leaves, bits=8,
+    ).reshape(3, spec.d_pad)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(oracle),
+                               atol=1e-6, rtol=1e-5)
+
+
+@pytest.mark.parametrize("per_message", [False, True])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_payload_qdq_error_within_one_cell_and_pad_invariant(per_message, bits):
+    """The fused payload pass (counter RNG) keeps every element within one
+    adaptive grid cell of its wire tensor and leaves padding lanes zero."""
+    spec, flat = _model_payload(4, seed=3)
+    out = payload_quantize_dequantize(flat, spec, per_message=per_message,
+                                      bits=bits, key=jax.random.PRNGKey(7))
+    levels = (1 << (bits - 1)) - 1
+    out_np, w_np = np.asarray(out), np.asarray(flat)
+    for off, size, psize in zip(spec.offsets, spec.sizes, spec.padded_sizes):
+        blk_w = w_np[:, off:off + size]
+        blk_o = out_np[:, off:off + size]
+        if per_message:
+            norm = np.linalg.norm(blk_w, axis=1, keepdims=True)
+            cell = np.max(np.abs(blk_w), axis=1, keepdims=True) / levels
+        else:
+            norm = np.linalg.norm(blk_w)
+            cell = np.abs(blk_w).max() / levels
+        assert (np.abs(blk_o - blk_w) <= cell * np.ones_like(norm) * (1 + 1e-5)
+                + 1e-7).all()
+        # padding lanes stay exactly zero
+        np.testing.assert_array_equal(out_np[:, off + size:off + psize], 0.0)
+
+
+def test_payload_qdq_honors_fixed_interval():
+    """QuantConfig.s (fixed grid interval) reaches the fused payload path:
+    every reconstructed element sits on the s * ||w_seg|| grid and within
+    one cell of its input."""
+    s = 1.0 / 127
+    spec, flat = _model_payload(3, seed=8)
+    out = payload_quantize_dequantize(flat, spec, per_message=True, bits=8,
+                                      s=s, key=jax.random.PRNGKey(13))
+    out_np, w_np = np.asarray(out), np.asarray(flat)
+    for off, size in zip(spec.offsets, spec.sizes):
+        blk_w = w_np[:, off:off + size]
+        blk_o = out_np[:, off:off + size]
+        norm = np.linalg.norm(blk_w, axis=1, keepdims=True)
+        cell = s * norm
+        assert (np.abs(blk_o - blk_w) <= cell * (1 + 1e-5) + 1e-7).all()
+        # grid membership: out / (s * norm) is an integer index in [-127, 127]
+        idx = blk_o / np.maximum(cell, 1e-12)
+        np.testing.assert_allclose(idx, np.round(idx), atol=2e-3)
+        assert np.abs(np.round(idx)).max() <= 127
+
+
+def test_payload_qdq_base_fusion():
+    """base + deq fusion equals deq-then-add."""
+    spec, flat = _model_payload(2, seed=5)
+    base = jnp.ones_like(flat) * 0.25
+    key = jax.random.PRNGKey(11)
+    plain = payload_quantize_dequantize(flat, spec, per_message=True, bits=8, key=key)
+    fused = payload_quantize_dequantize(flat, spec, per_message=True, bits=8,
+                                        key=key, base=base)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(base + plain),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_rows_wire_kernels_match_fused_qdq():
+    """The int8 wire kernels (quantize_rows -> dequantize_rows) reproduce the
+    fused qdq round trip given the same uniforms, including at a row count
+    that is NOT a multiple of ROW_TILE (single-block interpret path)."""
+    from repro.kernels.quantize.quantize import (
+        dequantize_rows_kernel_call,
+        qdq_rows_kernel_call,
+        quantize_rows_kernel_call,
+    )
+
+    rng = np.random.default_rng(2)
+    rows = 37  # deliberately not a ROW_TILE multiple
+    w = jnp.asarray(rng.normal(size=(rows, 128)).astype(np.float32) * 0.1)
+    u = jnp.asarray(rng.random(size=(rows, 128)).astype(np.float32))
+    s_rows = jnp.asarray(rng.uniform(1e-4, 1e-2, rows).astype(np.float32))
+    n_rows = jnp.asarray(rng.uniform(0.5, 3.0, rows).astype(np.float32))
+    q = quantize_rows_kernel_call(w, u, s_rows, n_rows, bits=8, interpret=True)
+    assert q.dtype == jnp.int8 and (np.abs(np.asarray(q)) <= 127).all()
+    deq = dequantize_rows_kernel_call(q, s_rows, n_rows, interpret=True)
+    fused = qdq_rows_kernel_call(w, u, s_rows, n_rows, bits=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(fused),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_counter_rng_unbiased_and_key_sensitive():
+    """The in-kernel counter-hash uniforms give unbiased stochastic rounding
+    (averaged over keys) and decorrelate across keys."""
+    spec, flat = _model_payload(1, seed=9, scale=0.1)
+    n = 120
+    acc = jnp.zeros_like(flat)
+    first = None
+    for i in range(n):
+        o = payload_quantize_dequantize(flat, spec, per_message=False, bits=8,
+                                        key=jax.random.PRNGKey(1000 + i))
+        if first is None:
+            first = o
+        acc = acc + o
+    assert bool(jnp.any(acc / n != first)), "outputs identical across keys"
+    # per-leaf unbiasedness: mean reconstruction within a few SE of w
+    w_np = np.asarray(flat)
+    mean = np.asarray(acc / n)
+    for off, size in zip(spec.offsets, spec.sizes):
+        blk_w = w_np[:, off:off + size]
+        blk_m = mean[:, off:off + size]
+        cell = np.abs(blk_w).max() / 127.0
+        assert np.abs(blk_m - blk_w).max() < 6.0 * cell / np.sqrt(n) * np.sqrt(12) + 1e-7

@@ -1,7 +1,7 @@
 """Random-walk sampling tests (paper §III-D, Lemma 1, straggler model)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.graph import make_topology
 from repro.core.walk import StragglerModel, sample_walks

@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Fast lane: tier-1 test suite without the slow end-to-end/multi-device tests.
+# Full tier-1 (what CI runs): PYTHONPATH=src python -m pytest -x -q
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m "not slow" "$@"
