@@ -1,10 +1,12 @@
 """Multi-device distribution layer (pod-scale DFedRW, §VI-F direction).
 
-Currently provides `repro.dist.gossip`: host-side gossip mixing and walk
-permutation collectives over a mesh axis. Sharding rules
-(`repro.dist.sharding`) and step builders (`repro.dist.steps`) land in a
-later PR; tests guard their imports with `pytest.importorskip`.
+* `repro.dist.gossip` — gossip mixing and walk permutation collectives over
+  a mesh axis (shard_map + ppermute, optionally quantized payloads).
+* `repro.dist.sharding` — the path+shape-driven sharding rule engine
+  (param/batch/cache PartitionSpecs for the production meshes).
+* `repro.dist.steps` — sharded step builders (train / serve / gossip /
+  federated train) returning (step_fn, specs).
 """
-from repro.dist import gossip
+from repro.dist import gossip, sharding, steps
 
-__all__ = ["gossip"]
+__all__ = ["gossip", "sharding", "steps"]

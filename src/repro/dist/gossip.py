@@ -48,11 +48,14 @@ class GossipConfig:
     topology: "ring" (offsets ±1), "expander" (powers of two — a circulant
     expander with log2(n) distinct offsets), or "all" (complete graph).
     quant_bits < 32 quantizes every transmitted payload (Eq. 12/13).
+    every: gossip period of the federated train step (make_fed_train_step
+    mixes after every `every`-th local step).
     """
 
     axis: str = "pod"
     topology: str = "ring"
     quant_bits: int = 32
+    every: int = 1
     seed: int = 0
 
     def offsets(self, n: int) -> list[int]:

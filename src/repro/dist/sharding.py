@@ -1,0 +1,201 @@
+"""Path+shape-driven sharding rule engine for the pod-scale meshes.
+
+Maps every parameter / batch / cache leaf of the model zoo onto a
+PartitionSpec over the production meshes (``("data", "model")`` single-pod,
+``("pod", "data", "model")`` multi-pod — see repro.launch.mesh). Rules key
+on the leaf's *path name* (the row/col-parallel naming convention of
+repro.models.layers) and validate against its *shape*: an axis is only ever
+assigned to a dim it divides, falling back down a per-leaf preference chain
+and ultimately to replication (indivisible dims such as odd vocabs).
+
+Conventions (documented in docs/ARCHITECTURE.md):
+
+* Stacked leading dims (the scanned ``n_blocks`` / ``encoder`` /
+  ``cross`` layer stacks, and the federated per-pod stack) are never
+  sharded.
+* **Column-parallel** (model axis on the *output* dim, data/FSDP on the
+  input dim): ``wq wk wv w_dkv w_uk w_uv w_gate w_up in_proj head router``.
+* **Row-parallel** (model axis on the *input* dim, data on the output):
+  ``wo w_down out_proj``.
+* **Expert weights** (rank 3 after the stack dim): expert-parallel — model
+  axis on the expert dim — when ``n_experts % model == 0``, else
+  tensor-parallel inside each expert with the col/row rule above.
+* ``embed`` ``(vocab, d)``: model on vocab, data on d; an indivisible vocab
+  moves the model axis onto d.
+* 1-D leaves (norm scales, biases, A_log/D/dt_bias) are replicated.
+* Batches shard the batch dim over data; a batch of 1 (long-context) falls
+  back to sequence sharding.
+* Caches: the n_blocks stack dim is never sharded; batch (else sequence)
+  over data; heads/state-channel dims over model.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "spec_for_leaf",
+    "param_specs",
+    "batch_specs",
+    "cache_specs",
+    "named",
+]
+
+# Leaf names (last path component) keyed to their parallelism role.
+_COL = frozenset(
+    {"wq", "wk", "wv", "w_dkv", "w_uk", "w_uv", "w_gate", "w_up",
+     "in_proj", "head", "router"}
+)
+_ROW = frozenset({"wo", "w_down", "out_proj"})
+
+# Param-tree roots whose leaves carry a leading scanned-layer stack dim.
+_STACKED_ROOTS = frozenset({"blocks", "encoder", "cross"})
+
+
+def _sizes(mesh) -> dict:
+    """Axis name -> size for Mesh and AbstractMesh alike."""
+    return dict(mesh.shape)
+
+
+def _assign(shape, prefs, sizes) -> P:
+    """Greedy placement: each (axis, candidate dims) pair lands on the first
+    free dim the axis size divides; axes absent from the mesh are skipped."""
+    spec: list = [None] * len(shape)
+    for ax, cands in prefs:
+        size = sizes.get(ax)
+        if not size:
+            continue
+        for d in cands:
+            if spec[d] is None and shape[d] % size == 0:
+                spec[d] = ax
+                break
+    return P(*spec)
+
+
+def spec_for_leaf(path: str, shape: tuple, mesh, n_stack: int = 0) -> P:
+    """PartitionSpec for one param leaf.
+
+    path: "/"-joined pytree path (e.g. "blocks/slot0/mixer/wq").
+    n_stack: number of leading stacked dims (never sharded).
+    """
+    sizes = _sizes(mesh)
+    name = path.rsplit("/", 1)[-1]
+    nd = len(shape)
+    free = nd - n_stack
+    if free <= 1:
+        # Norm scales, biases, A_log/D/dt_bias, scalars: replicated.
+        return P(*([None] * nd))
+    in_pos, out_pos = nd - 2, nd - 1
+    if name == "embed":
+        # (vocab, d): model prefers the vocab dim; odd vocabs fall back to d.
+        prefs = [("model", [in_pos, out_pos]), ("data", [out_pos])]
+    elif name == "conv_w":
+        # (d_conv, conv_channels): taps never sharded; channels over model.
+        prefs = [("model", [out_pos])]
+    elif name in _COL or name in _ROW:
+        model_first = out_pos if name in _COL else in_pos
+        model_second = in_pos if name in _COL else out_pos
+        data_dim = in_pos if name in _COL else out_pos
+        model_pref = [model_first, model_second]
+        if free == 3:
+            # MoE expert stack (E, d_in, d_out): expert-parallel when the
+            # model-axis size divides the expert count (E % model == 0),
+            # else tensor-parallel inside each expert.
+            model_pref = [n_stack] + model_pref
+        prefs = [("model", model_pref), ("data", [data_dim])]
+    else:
+        # Unknown >=2-D leaf: replicate rather than guess.
+        return P(*([None] * nd))
+    return _assign(shape, prefs, sizes)
+
+
+def _key_str(k) -> str:
+    return str(getattr(k, "key", getattr(k, "idx", k)))
+
+
+def param_specs(params: Any, mesh, fed_axis: str | None = None) -> Any:
+    """PartitionSpec pytree mirroring ``params`` leaf-for-leaf.
+
+    fed_axis: prepend this mesh axis to every spec — the specs then address
+    the *per-pod stacked* tree ``(n_pods, *leaf.shape)`` used by the
+    federated gossip/train steps (callers pass the unstacked tree here).
+    """
+
+    def one(kp, leaf):
+        parts = [_key_str(k) for k in kp]
+        n_stack = 1 if parts and parts[0] in _STACKED_ROOTS else 0
+        spec = spec_for_leaf("/".join(parts), leaf.shape, mesh, n_stack)
+        if fed_axis is not None:
+            spec = P(fed_axis, *tuple(spec))
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_specs(batch: Any, mesh, fed_axis: str | None = None) -> Any:
+    """Batch leaves shard dim 0 over data; batch=1 long-context falls back
+    to sequence sharding (dim 1). With ``fed_axis`` the leading federated
+    group dim is sharded over that axis first."""
+    sizes = _sizes(mesh)
+
+    def one(leaf):
+        shape = tuple(leaf.shape)
+        lead: list = []
+        if fed_axis is not None:
+            ok = sizes.get(fed_axis) and shape and shape[0] % sizes[fed_axis] == 0
+            lead = [fed_axis if ok else None]
+            shape = shape[1:]
+        spec: list = [None] * len(shape)
+        dsize = sizes.get("data")
+        if dsize and shape:
+            if shape[0] % dsize == 0:
+                spec[0] = "data"
+            elif len(shape) > 1 and shape[1] % dsize == 0:
+                spec[1] = "data"
+        return P(*lead, *spec)
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+# Decode-cache rules: absolute dim positions (incl. the n_blocks stack dim
+# at 0, which is never sharded) per leaf name — shapes per models/layers.py.
+_CACHE_PREFS = {
+    # (n_blocks, B, S, kv_heads, head_dim)
+    "k": [("data", (1, 2)), ("model", (3, 4))],
+    "v": [("data", (1, 2)), ("model", (3, 4))],
+    # (n_blocks, B, S, rank)
+    "c_kv": [("data", (1, 2)), ("model", (3,))],
+    "k_rope": [("data", (1, 2)), ("model", (3,))],
+    # (n_blocks, B, d_conv-1, conv_channels)
+    "conv": [("data", (1,)), ("model", (3,))],
+    # (n_blocks, B, n_heads, head_dim, state)
+    "ssm": [("data", (1,)), ("model", (2, 3))],
+}
+
+
+def cache_specs(cache: Any, mesh) -> Any:
+    """PartitionSpecs for a decode cache pytree (see T.init_cache)."""
+    sizes = _sizes(mesh)
+
+    def one(kp, leaf):
+        name = _key_str(kp[-1]) if kp else ""
+        shape = tuple(leaf.shape)
+        if name == "enc_out":  # (B, enc_len, d)
+            return _assign(shape, [("data", (0,)), ("model", (2,))], sizes)
+        prefs = _CACHE_PREFS.get(name)
+        if prefs is None or not shape:  # "pos" scalar and unknown leaves
+            return P(*([None] * len(shape)))
+        prefs = [(ax, [d for d in dims if d < len(shape)]) for ax, dims in prefs]
+        return _assign(shape, prefs, sizes)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def named(specs: Any, mesh) -> Any:
+    """PartitionSpec pytree -> NamedSharding pytree over ``mesh``."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda s: isinstance(s, P),
+    )

@@ -1,0 +1,123 @@
+"""Sharded step builders for the pod-scale meshes.
+
+Each builder returns a jit-able step function plus the PartitionSpecs of its
+parameter tree (from repro.dist.sharding), so callers can ``jax.jit(fn,
+in_shardings=named(specs, mesh))`` or ``jax.device_put`` real arrays:
+
+* ``make_train_step`` — sharded fwd/bwd + decreasing-lr SGD with momentum
+  (paper §VI-B schedule), optional remat.
+* ``make_serve_step`` — one batched decode step over the KV-cache path.
+* ``make_gossip_step`` — per-pod stacked params mixed with the
+  dist.gossip ring/expander weights (doubly stochastic, so the global mean
+  over the pod axis is preserved — paper Eq. 11 at pod scale).
+* ``make_fed_train_step`` — the decomposed DFedRW deployment: per-pod local
+  momentum-SGD steps (no cross-pod collectives) + a gossip mix every
+  ``gossip.every`` steps, quantizing payloads when ``gossip.quant_bits < 32``
+  (QDFedRW, Eq. 12/14).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.gossip import GossipConfig, gossip_mix
+from repro.dist.sharding import param_specs
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+from repro.optim.sgd import decreasing_lr, momentum_sgd
+
+__all__ = [
+    "make_train_step",
+    "make_serve_step",
+    "make_gossip_step",
+    "make_fed_train_step",
+]
+
+
+def make_train_step(cfg: ArchConfig, mesh, *, lr_r: float = 5.0,
+                    beta: float = 0.9, remat: bool = True,
+                    unroll: bool = False):
+    """step_fn(params, vel, batch, step) -> (params, vel, loss).
+
+    ``vel`` is a zeros_like mirror of ``params`` (momentum). The learning
+    rate follows the paper's decreasing schedule 1/(lr_r * (step+1)^q)."""
+    p_specs = param_specs(T.abstract_params(cfg), mesh)
+
+    def step_fn(params, vel, batch, step):
+        loss, grads = jax.value_and_grad(
+            lambda p: T.loss_fn(cfg, p, batch, remat=remat, unroll=unroll)
+        )(params)
+        lr = decreasing_lr(step + 1, r=lr_r)
+        params, vel = momentum_sgd(params, vel, grads, lr, beta)
+        return params, vel, loss
+
+    return step_fn, p_specs
+
+
+def make_serve_step(cfg: ArchConfig, mesh, *, unroll: bool = False):
+    """serve_fn(params, cache, token) -> (logits, new_cache)."""
+    p_specs = param_specs(T.abstract_params(cfg), mesh)
+
+    def serve_fn(params, cache, token):
+        return T.decode_step(cfg, params, cache, token, unroll=unroll)
+
+    return serve_fn, p_specs
+
+
+def make_gossip_step(cfg: ArchConfig, mesh, gossip: GossipConfig, *,
+                     dtype=jnp.bfloat16):
+    """Cross-pod decentralized averaging over per-pod stacked params.
+
+    Returns (gstep, p_specs, fed_abstract):
+      gstep(params, key) -> mixed params, where ``params`` stacks one model
+      per pod along a leading dim sharded over ``gossip.axis``. The mixing
+      weights (dist.gossip.mixing_weights) are doubly stochastic, so the
+      global mean over the axis is preserved. ``key`` seeds the stochastic
+      quantizer when ``gossip.quant_bits < 32`` (ignored at fp32).
+      fed_abstract is the ShapeDtypeStruct tree of the stacked params.
+    """
+    base = T.abstract_params(cfg, dtype)
+    n_pods = dict(mesh.shape)[gossip.axis]
+    p_specs = param_specs(base, mesh, fed_axis=gossip.axis)
+    fed_abstract = jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct((n_pods, *l.shape), l.dtype), base)
+
+    def gstep(params, key):
+        return gossip_mix(params, p_specs, mesh, gossip, key)
+
+    return gstep, p_specs, fed_abstract
+
+
+def make_fed_train_step(cfg: ArchConfig, mesh, gossip: GossipConfig, *,
+                        lr_r: float = 5.0, beta: float = 0.9,
+                        remat: bool = True, unroll: bool = False,
+                        dtype=jnp.bfloat16):
+    """The DFedRW pod deployment: step_fn(params, vel, batch, step, key)
+    -> (params, vel, mean_loss).
+
+    ``params``/``vel`` stack one model per pod (leading dim over
+    ``gossip.axis``); ``batch`` leaves carry the matching leading group dim
+    (see batch_specs(..., fed_axis=...)). Every step runs an independent
+    local momentum-SGD step per pod (vmapped over the stack — XLA keeps it
+    pod-local, no cross-pod collectives); every ``gossip.every``-th step the
+    pods additionally gossip-average (quantized when quant_bits < 32).
+    ``dtype`` sets the returned ``fed_abstract`` (match it to the params the
+    step will actually run on, e.g. float32 for the CPU launcher)."""
+    gstep, p_specs, fed_abstract = make_gossip_step(cfg, mesh, gossip, dtype=dtype)
+    every = max(int(gossip.every), 1)
+
+    def step_fn(params, vel, batch, step, key):
+        losses, grads = jax.vmap(jax.value_and_grad(
+            lambda p, b: T.loss_fn(cfg, p, b, remat=remat, unroll=unroll)
+        ))(params, batch)
+        lr = decreasing_lr(step + 1, r=lr_r)
+        params, vel = momentum_sgd(params, vel, grads, lr, beta)
+        if every == 1:
+            params = gstep(params, key)
+        else:
+            params = jax.lax.cond(
+                (step + 1) % every == 0,
+                lambda p: gstep(p, key), lambda p: p, params)
+        return params, vel, jnp.mean(losses)
+
+    return step_fn, p_specs, fed_abstract

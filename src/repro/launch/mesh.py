@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh", "HW"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_pod_mesh", "HW"]
 
 
 class HW:
@@ -35,5 +35,17 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over the host's real devices (smoke tests / examples)."""
     n = len(jax.devices())
-    data = min(data, n)
-    return jax.make_mesh((data, 1), ("data", "model"))
+    model = max(1, min(model, n))
+    data = max(1, min(data, n // model))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_pod_mesh(pods: int = 0):
+    """Host-device mesh with a leading gossip axis: (pod, data, model).
+
+    pods=0 puts every host device on the pod axis (one model replica per
+    device); otherwise the remaining devices fold into the data axis."""
+    n = len(jax.devices())
+    pods = pods or n
+    assert n % pods == 0, f"{n} devices not divisible into {pods} pods"
+    return jax.make_mesh((pods, n // pods, 1), ("pod", "data", "model"))

@@ -4,12 +4,19 @@ Two modes:
 - protocol: the paper's federated protocol (DFedRW/QDFedRW/baselines) on
   synthetic federated data -- runs anywhere, this is the reproduction.
 - pod: the pod-scale LM train step on the host's devices (smoke-size archs
-  on CPU; full archs on a real TPU slice). ``--fed`` uses the DFedRW gossip
-  step over a >1-sized axis.
+  on CPU; full archs on a real TPU slice). ``--fed`` runs the decomposed
+  DFedRW deployment instead: one model replica per pod-axis device, local
+  momentum-SGD steps, gossip averaging every ``--gossip-every`` steps
+  (quantized with ``--bits < 32``). With a single host device the pod axis
+  has size 1 and gossip degenerates to the identity — set
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a real mix.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train protocol --algo dfedrw --rounds 100
   PYTHONPATH=src python -m repro.launch.train pod --arch yi-6b --smoke --steps 20
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.train pod --arch yi-6b --smoke \
+    --fed --gossip-every 2 --bits 8 --steps 20
 """
 from __future__ import annotations
 
@@ -68,30 +75,82 @@ def pod_main(args) -> None:
     import jax.numpy as jnp
 
     from repro.configs import get_arch, get_smoke
-    from repro.dist.steps import make_train_step
     from repro.models import transformer as T
 
     cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
-    mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"))
-    step_fn, p_specs = make_train_step(cfg, mesh, lr_r=args.lr_r)
     key = jax.random.PRNGKey(0)
+    rng = np.random.default_rng(0)
+    b, s = args.batch, args.seq
+
+    def make_batch(lead=()):
+        toks = rng.integers(0, cfg.vocab, size=(*lead, b, s + 1))
+        batch = {"tokens": jnp.asarray(toks[..., :-1], jnp.int32),
+                 "labels": jnp.asarray(toks[..., 1:], jnp.int32)}
+        if cfg.frontend != "none":
+            batch["embeds"] = jnp.asarray(rng.normal(
+                size=(*lead, b, cfg.frontend_tokens, cfg.d_model)), jnp.float32)
+        return batch
+
+    if args.fed:
+        fed_pod_main(args, cfg, key, make_batch)
+        return
+
+    from repro.dist.steps import make_train_step
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(data=len(jax.devices()))
+
+    step_fn, p_specs = make_train_step(cfg, mesh, lr_r=args.lr_r)
     params = T.init_params(cfg, key, jnp.float32)
     vel = jax.tree_util.tree_map(jnp.zeros_like, params)
     jitted = jax.jit(step_fn)
-    rng = np.random.default_rng(0)
-    b, s = args.batch, args.seq
     with mesh:
         for step in range(args.steps):
-            toks = rng.integers(0, cfg.vocab, size=(b, s + 1))
-            batch = {"tokens": jnp.asarray(toks[:, :-1]),
-                     "labels": jnp.asarray(toks[:, 1:])}
-            if cfg.frontend != "none":
-                batch["embeds"] = jnp.asarray(
-                    rng.normal(size=(b, cfg.frontend_tokens, cfg.d_model)), jnp.float32)
             t0 = time.time()
-            params, vel, loss = jitted(params, vel, batch, jnp.int32(step))
+            params, vel, loss = jitted(params, vel, make_batch(), jnp.int32(step))
             print(f"step {step:3d} loss={float(loss):.4f} ({time.time()-t0:.2f}s)")
     print("done")
+
+
+def fed_pod_main(args, cfg, key, make_batch) -> None:
+    """pod --fed: the decomposed DFedRW deployment on the host's devices."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.dist.gossip import GossipConfig
+    from repro.dist.sharding import batch_specs, named
+    from repro.dist.steps import make_fed_train_step
+    from repro.launch.mesh import make_pod_mesh
+    from repro.models import transformer as T
+
+    mesh = make_pod_mesh(args.pods)
+    g = dict(mesh.shape)["pod"]
+    gossip = GossipConfig(axis="pod", topology=args.topology,
+                          every=args.gossip_every, quant_bits=args.bits)
+    step_fn, p_specs, _ = make_fed_train_step(cfg, mesh, gossip, lr_r=args.lr_r,
+                                              remat=False, dtype=jnp.float32)
+    base = T.init_params(cfg, key, jnp.float32)
+    params = jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l, (g, *l.shape)).copy(), base)
+    params = jax.device_put(params, named(p_specs, mesh))
+    vel = jax.tree_util.tree_map(jnp.zeros_like, params)
+    jitted = jax.jit(step_fn)
+    print(f"fed pod mode: {g} pods x data={dict(mesh.shape)['data']} "
+          f"topology={gossip.topology} every={gossip.every} bits={gossip.quant_bits}")
+    b_shard = None  # batch shapes are constant: compute shardings once
+    with mesh:
+        for step in range(args.steps):
+            batch = make_batch(lead=(g,))
+            if b_shard is None:
+                b_shard = named(batch_specs(batch, mesh, fed_axis="pod"), mesh)
+            batch = jax.device_put(batch, b_shard)
+            key, sub = jax.random.split(key)
+            t0 = time.time()
+            params, vel, loss = jitted(params, vel, batch, jnp.int32(step), sub)
+            print(f"step {step:3d} loss={float(loss):.4f} ({time.time()-t0:.2f}s)")
+    leaf = jax.tree_util.tree_leaves(params)[0]
+    spread = float(jnp.max(jnp.std(leaf.astype(jnp.float32), axis=0)))
+    print(f"done (inter-pod param spread={spread:.5f})")
 
 
 def main(argv=None) -> None:
@@ -116,6 +175,15 @@ def main(argv=None) -> None:
     q.add_argument("--batch", type=int, default=4)
     q.add_argument("--seq", type=int, default=64)
     q.add_argument("--lr_r", type=float, default=100.0)
+    q.add_argument("--fed", action="store_true",
+                   help="DFedRW: per-pod replicas + gossip averaging")
+    q.add_argument("--pods", type=int, default=0,
+                   help="pod-axis size (0 = all host devices)")
+    q.add_argument("--gossip-every", type=int, default=1)
+    q.add_argument("--bits", type=int, default=32,
+                   help="gossip payload quantization bits (<32 = QDFedRW)")
+    q.add_argument("--topology", default="ring",
+                   choices=["ring", "expander", "all"])
     args = ap.parse_args(argv)
     (protocol_main if args.mode == "protocol" else pod_main)(args)
 

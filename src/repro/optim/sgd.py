@@ -20,6 +20,7 @@ __all__ = [
     "sgd_update",
     "MomentumState",
     "momentum_init",
+    "momentum_sgd",
     "momentum_update",
     "adamw_init",
     "adamw_update",
@@ -53,11 +54,24 @@ def momentum_init(params: Any) -> MomentumState:
     return MomentumState(jax.tree_util.tree_map(jnp.zeros_like, params))
 
 
+def momentum_sgd(params: Any, vel: Any, grads: Any, lr, beta: float = 0.9
+                 ) -> tuple[Any, Any]:
+    """Heavy-ball update on raw pytrees, accumulated in f32 but returned in
+    each leaf's own dtype (bf16 params stay bf16). The dist.steps builders
+    use this directly with a zeros_like velocity mirror."""
+    vel = jax.tree_util.tree_map(
+        lambda v, g: (beta * v + g.astype(jnp.float32)).astype(v.dtype),
+        vel, grads)
+    params = jax.tree_util.tree_map(
+        lambda p, v: (p.astype(jnp.float32) - lr * v.astype(jnp.float32)).astype(p.dtype),
+        params, vel)
+    return params, vel
+
+
 def momentum_update(
     params: Any, grads: Any, state: MomentumState, lr: jax.Array, beta: float = 0.9
 ) -> tuple[Any, MomentumState]:
-    vel = jax.tree_util.tree_map(lambda v, g: beta * v + g, state.velocity, grads)
-    new = jax.tree_util.tree_map(lambda p, v: p - lr * v, params, vel)
+    new, vel = momentum_sgd(params, state.velocity, grads, lr, beta)
     return new, MomentumState(vel)
 
 

@@ -21,8 +21,6 @@ TINY = ArchConfig(name="tiny", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
 
 
 def test_train_step_learns_single_device():
-    pytest.importorskip("repro.dist.steps",
-                        reason="repro.dist.steps lands in a later PR")
     from repro.dist.steps import make_train_step
 
     mesh = jax.make_mesh((1, 1), ("data", "model"))
@@ -65,9 +63,6 @@ def test_moe_group_size_equivalence():
 
 def test_optimize_cfg_rules():
     import importlib
-    pytest.importorskip("repro.dist.sharding",
-                        reason="repro.launch.dryrun needs repro.dist.sharding, "
-                               "which lands in a later PR")
     D = importlib.import_module("repro.launch.dryrun")
     from repro.configs import get_arch
 
@@ -123,8 +118,6 @@ _GOSSIP_STEP = textwrap.dedent("""
 
 @pytest.mark.slow
 def test_gossip_step_semantics_multidevice():
-    pytest.importorskip("repro.dist.steps",
-                        reason="repro.dist.steps lands in a later PR")
     code = _GOSSIP_STEP.format(src=SRC)
     r = subprocess.run([sys.executable, "-c", code], capture_output=True, text=True,
                        timeout=600)

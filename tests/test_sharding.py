@@ -5,9 +5,6 @@ import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
-pytest.importorskip("repro.dist.sharding",
-                    reason="repro.dist.sharding lands in a later PR")
-
 from repro.configs import ARCH_IDS, get_arch
 from repro.dist.sharding import batch_specs, cache_specs, param_specs, spec_for_leaf
 from repro.models import transformer as T

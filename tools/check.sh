@@ -1,6 +1,24 @@
 #!/usr/bin/env bash
-# Fast lane: tier-1 test suite without the slow end-to-end/multi-device tests.
-# Full tier-1 (what CI runs): PYTHONPATH=src python -m pytest -x -q
+# Test lanes (full tier-1, what CI runs: PYTHONPATH=src python -m pytest -x -q)
+#
+#   tools/check.sh            fast lane: tier-1 without the slow
+#                             end-to-end/multi-device tests
+#   tools/check.sh --dist     dist lane: only the `slow`-marked multi-device
+#                             subprocess tests (gossip collectives, gossip
+#                             train step, dry-run roofline), run under
+#                             XLA_FLAGS=--xla_force_host_platform_device_count=8
+#                             so non-subprocess slow tests also see 8 devices.
+#                             (The subprocess tests pin their own device
+#                             counts before importing jax, so the outer flag
+#                             never leaks into their XLA configuration.)
+#
+# Extra args are forwarded to pytest in both lanes.
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m "not slow" "$@"
+if [[ "${1:-}" == "--dist" ]]; then
+  shift
+  XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m "slow" "$@"
+else
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m "not slow" "$@"
+fi
