@@ -25,6 +25,7 @@ MODULES = [
     "table4_latency",
     "prop1_quant_saving",
     "round_engine_bench",
+    "serve_engine_bench",
     "pod_gossip_roofline",
 ]
 

@@ -14,9 +14,13 @@ Conventions (documented in docs/ARCHITECTURE.md):
   ``cross`` layer stacks, and the federated per-pod stack) are never
   sharded.
 * **Column-parallel** (model axis on the *output* dim, data/FSDP on the
-  input dim): ``wq wk wv w_dkv w_uk w_uv w_gate w_up in_proj head router``.
+  input dim): ``wq wk wv w_dkv w_uk w_uv w_gate w_up head router``.
 * **Row-parallel** (model axis on the *input* dim, data on the output):
-  ``wo w_down out_proj``.
+  ``wo w_down``.
+* **SSM mixer** (``in_proj out_proj conv_w`` + conv/ssm cache): data/FSDP
+  only, never the model axis — its fused channel dim is split/concatenated
+  at tile-misaligned boundaries, which the jax 0.4.37 partitioner
+  miscompiles (see ``_SSM_DATA_ONLY``).
 * **Expert weights** (rank 3 after the stack dim): expert-parallel — model
   axis on the expert dim — when ``n_experts % model == 0``, else
   tensor-parallel inside each expert with the col/row rule above.
@@ -40,15 +44,27 @@ __all__ = [
     "param_specs",
     "batch_specs",
     "cache_specs",
+    "serve_arg_specs",
     "named",
 ]
 
 # Leaf names (last path component) keyed to their parallelism role.
 _COL = frozenset(
     {"wq", "wk", "wv", "w_dkv", "w_uk", "w_uv", "w_gate", "w_up",
-     "in_proj", "head", "router"}
+     "head", "router"}
 )
-_ROW = frozenset({"wo", "w_down", "out_proj"})
+_ROW = frozenset({"wo", "w_down"})
+# SSM mixer leaves stay OFF the model axis (data/FSDP only): the mamba path
+# splits and re-concatenates its fused channel dim (z|x|B|C|dt, then
+# x|B|C around the conv) at boundaries that don't align with model-axis
+# tiles, and the jax 0.4.37 SPMD partitioner miscompiles misaligned
+# slices/concats of tiled operands (verified on the CPU backend: crossing
+# segments return garbage). Sharding back-propagation re-tiles these
+# tensors even when only a *neighbouring* leaf is model-sharded, so the
+# whole mixer must be model-replicated; attention/FFN blocks carry the
+# tensor parallelism. (MLA's two fused splits have no re-concat and are
+# protected by the replication guard in layers._mla_qkv instead.)
+_SSM_DATA_ONLY = frozenset({"in_proj", "out_proj", "conv_w"})
 
 # Param-tree roots whose leaves carry a leading scanned-layer stack dim.
 _STACKED_ROOTS = frozenset({"blocks", "encoder", "cross"})
@@ -91,9 +107,12 @@ def spec_for_leaf(path: str, shape: tuple, mesh, n_stack: int = 0) -> P:
     if name == "embed":
         # (vocab, d): model prefers the vocab dim; odd vocabs fall back to d.
         prefs = [("model", [in_pos, out_pos]), ("data", [out_pos])]
-    elif name == "conv_w":
-        # (d_conv, conv_channels): taps never sharded; channels over model.
-        prefs = [("model", [out_pos])]
+    elif name in _SSM_DATA_ONLY:
+        # Mamba mixer: model-replicated (see _SSM_DATA_ONLY above); FSDP
+        # keeps the matmul weights data-sharded on their non-fused dim.
+        if name == "conv_w":
+            return P(*([None] * nd))
+        prefs = [("data", [in_pos if name == "in_proj" else out_pos])]
     elif name in _COL or name in _ROW:
         model_first = out_pos if name in _COL else in_pos
         model_second = in_pos if name in _COL else out_pos
@@ -161,22 +180,35 @@ def batch_specs(batch: Any, mesh, fed_axis: str | None = None) -> Any:
 
 # Decode-cache rules: absolute dim positions (incl. the n_blocks stack dim
 # at 0, which is never sharded) per leaf name — shapes per models/layers.py.
+# Dims that RoPE splits in half (head_dim, k_rope) and MLA's latent rank are
+# never model-sharded: tiled split/concat + scatter on those dims is
+# miscompiled by the jax 0.4.37 partitioner (see _SSM_DATA_ONLY) — model
+# parallelism on caches lives on the kv-heads dim only.
 _CACHE_PREFS = {
     # (n_blocks, B, S, kv_heads, head_dim)
-    "k": [("data", (1, 2)), ("model", (3, 4))],
-    "v": [("data", (1, 2)), ("model", (3, 4))],
+    "k": [("data", (1, 2)), ("model", (3,))],
+    "v": [("data", (1, 2)), ("model", (3,))],
     # (n_blocks, B, S, rank)
-    "c_kv": [("data", (1, 2)), ("model", (3,))],
-    "k_rope": [("data", (1, 2)), ("model", (3,))],
-    # (n_blocks, B, d_conv-1, conv_channels)
-    "conv": [("data", (1,)), ("model", (3,))],
-    # (n_blocks, B, n_heads, head_dim, state)
-    "ssm": [("data", (1,)), ("model", (2, 3))],
+    "c_kv": [("data", (1, 2))],
+    "k_rope": [("data", (1, 2))],
+    # (n_blocks, B, d_conv-1, conv_channels) — channels never model-sharded:
+    # they are the fused x|B|C concat (see _SSM_DATA_ONLY).
+    "conv": [("data", (1,))],
+    # (n_blocks, B, n_heads, head_dim, state) — model-replicated with the
+    # rest of the SSM mixer.
+    "ssm": [("data", (1,))],
 }
 
 
 def cache_specs(cache: Any, mesh) -> Any:
-    """PartitionSpecs for a decode cache pytree (see T.init_cache)."""
+    """PartitionSpecs for a decode cache pytree (see T.init_cache).
+
+    The batch (slot) dim rides ``data``; the sequence-dim fallback is taken
+    ONLY for batch==1 (the long-context dry-run/analysis shapes): the serve
+    engine scatters new k/v at runtime slots along S, and scatter/concat on
+    a tiled dim is miscompiled by the 0.4.37 partitioner (see
+    ``_SSM_DATA_ONLY``) — an indivisible multi-slot batch replicates
+    instead."""
     sizes = _sizes(mesh)
 
     def one(kp, leaf):
@@ -187,10 +219,31 @@ def cache_specs(cache: Any, mesh) -> Any:
         prefs = _CACHE_PREFS.get(name)
         if prefs is None or not shape:  # "pos" scalar and unknown leaves
             return P(*([None] * len(shape)))
-        prefs = [(ax, [d for d in dims if d < len(shape)]) for ax, dims in prefs]
+        batch = shape[1] if len(shape) > 1 else 0
+        prefs = [(ax, [d for d in dims if d < len(shape)
+                       and not (ax == "data" and d == 2 and batch != 1)])
+                 for ax, dims in prefs]
         return _assign(shape, prefs, sizes)
 
     return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def serve_arg_specs(args: Any, mesh) -> Any:
+    """Specs for the serve engine's per-step host arrays (token (B,1),
+    positions/n_valid/active/temps (B,)): the slot dim rides the ``data``
+    axis — matching the cache's batch-dim sharding, so slot-indexed
+    scatters stay local — and replicates when it does not divide."""
+    sizes = _sizes(mesh)
+
+    def one(leaf):
+        shape = tuple(leaf.shape)
+        spec: list = [None] * len(shape)
+        dsize = sizes.get("data")
+        if dsize and shape and shape[0] % dsize == 0:
+            spec[0] = "data"
+        return P(*spec)
+
+    return jax.tree_util.tree_map(one, args)
 
 
 def named(specs: Any, mesh) -> Any:

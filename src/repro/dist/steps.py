@@ -6,7 +6,10 @@ in_shardings=named(specs, mesh))`` or ``jax.device_put`` real arrays:
 
 * ``make_train_step`` — sharded fwd/bwd + decreasing-lr SGD with momentum
   (paper §VI-B schedule), optional remat.
-* ``make_serve_step`` — one batched decode step over the KV-cache path.
+* ``make_serve_step`` — one batched decode step over the KV-cache path
+  (``slots=True`` for the continuous-batching per-slot variant).
+* ``make_prefill_step`` — chunked batched prefill writing at per-slot
+  offsets into the decode cache layout (the serve engine's admission path).
 * ``make_gossip_step`` — per-pod stacked params mixed with the
   dist.gossip ring/expander weights (doubly stochastic, so the global mean
   over the pod axis is preserved — paper Eq. 11 at pod scale).
@@ -29,6 +32,7 @@ from repro.optim.sgd import decreasing_lr, momentum_sgd
 __all__ = [
     "make_train_step",
     "make_serve_step",
+    "make_prefill_step",
     "make_gossip_step",
     "make_fed_train_step",
 ]
@@ -54,14 +58,40 @@ def make_train_step(cfg: ArchConfig, mesh, *, lr_r: float = 5.0,
     return step_fn, p_specs
 
 
-def make_serve_step(cfg: ArchConfig, mesh, *, unroll: bool = False):
-    """serve_fn(params, cache, token) -> (logits, new_cache)."""
+def make_serve_step(cfg: ArchConfig, mesh, *, unroll: bool = False,
+                    slots: bool = False):
+    """serve_fn(params, cache, token) -> (logits, new_cache).
+
+    slots=True builds the continuous-batching variant
+    ``serve_fn(params, cache, token, positions, active)`` where every cache
+    row is an independent request slot at its own absolute position and
+    ``active`` freezes retired/free rows (see T.decode_step)."""
     p_specs = param_specs(T.abstract_params(cfg), mesh)
 
-    def serve_fn(params, cache, token):
-        return T.decode_step(cfg, params, cache, token, unroll=unroll)
+    if slots:
+        def serve_fn(params, cache, token, positions, active):
+            return T.decode_step(cfg, params, cache, token, unroll=unroll,
+                                 positions=positions, active=active)
+    else:
+        def serve_fn(params, cache, token):
+            return T.decode_step(cfg, params, cache, token, unroll=unroll)
 
     return serve_fn, p_specs
+
+
+def make_prefill_step(cfg: ArchConfig, mesh, *, unroll: bool = False):
+    """prefill_fn(params, cache, tokens (B,C), positions (B,), n_valid (B,))
+    -> (logits (B,C,V), new_cache): chunked batched prefill into the decode
+    cache layout at per-slot offsets (see T.prefill_chunk). Shares
+    ``param_specs``/``cache_specs`` sharding with the decode step — the
+    whole serve path lowers onto one mesh."""
+    p_specs = param_specs(T.abstract_params(cfg), mesh)
+
+    def prefill_fn(params, cache, tokens, positions, n_valid):
+        return T.prefill_chunk(cfg, params, cache, tokens, positions, n_valid,
+                               unroll=unroll)
+
+    return prefill_fn, p_specs
 
 
 def make_gossip_step(cfg: ArchConfig, mesh, gossip: GossipConfig, *,

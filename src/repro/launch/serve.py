@@ -1,73 +1,175 @@
-"""Serving launcher: batched autoregressive decode with the KV-cache path.
+"""Serving launcher: continuous-batching engine over the sharded KV-cache
+path (repro.serve). Generates a synthetic request workload, runs it through
+`ServeEngine`, and reports per-request TTFT/TPOT plus engine throughput.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b --smoke \
-      --batch 8 --prompt-len 32 --gen 32
+      --requests 32 --max-concurrency 8
+
+  # staggered Poisson arrivals, mixed lengths, 8 virtual devices:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-72b --smoke \
+      --requests 32 --max-concurrency 8 --arrival 0.5 --mixed \
+      --mesh-model 2 --verify
 """
 from __future__ import annotations
 
 import argparse
-import time
+import json
 
-import numpy as np
+
+def build_requests(args, cfg):
+    """Synthetic workload: fixed lengths by default; --mixed draws prompt
+    lengths U[plen/2, plen] and budgets U[gen/4, gen]; --arrival r spreads
+    arrivals as Poisson(rate=r requests per engine step). enc-dec archs get
+    random frontend embeddings per request."""
+    import numpy as np
+
+    from repro.serve import Request
+
+    rng = np.random.default_rng(args.seed)
+    step = 0
+    reqs = []
+    for i in range(args.requests):
+        plen = int(rng.integers(max(args.prompt_len // 2, 1), args.prompt_len + 1)) \
+            if args.mixed else args.prompt_len
+        gen = int(rng.integers(max(args.gen // 4, 1), args.gen + 1)) \
+            if args.mixed else args.gen
+        if args.arrival > 0 and i > 0:
+            step += int(rng.poisson(1.0 / args.arrival))
+        embeds = None
+        if cfg.enc_dec:
+            embeds = rng.normal(
+                size=(cfg.frontend_tokens, cfg.d_model)).astype(np.float32)
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab, size=(plen,)),
+            max_tokens=gen, eos_id=args.eos_id, temperature=args.temperature,
+            arrival_step=step, embeds=embeds))
+    return reqs
+
+
+def sequential_reference(cfg, params, req, max_len: int, step=None):
+    """The pre-engine serving semantics: one request, token-at-a-time
+    prefill through the decode path, then greedy/temp-0 decode. The
+    engine's per-request outputs must match this bit-for-bit at temp 0.
+    ``step`` is the (shared, pre-compiled) jitted decode program — jit
+    caches key on the function object, so it must be built ONCE by the
+    caller, not per request."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import transformer as T
+
+    cache = T.init_cache(cfg, 1, max_len, jnp.float32,
+                         enc_len=cfg.frontend_tokens if cfg.enc_dec else 0)
+    if cfg.enc_dec:
+        from repro.models.transformer import _run_encoder
+        cache["enc_out"] = _run_encoder(
+            cfg, params, jnp.asarray(req.embeds)[None], remat=False)
+    if step is None:
+        step = jax.jit(lambda p, c, t: T.decode_step(cfg, p, c, t))
+    logits = None
+    for t in range(len(req.prompt)):
+        logits, cache = step(params, cache, jnp.asarray(req.prompt[None, t:t + 1]))
+    out = []
+    for _ in range(req.max_tokens):
+        tok = int(jnp.argmax(logits[0, -1]))
+        out.append(tok)
+        if req.eos_id >= 0 and tok == req.eos_id:
+            break
+        logits, cache = step(params, cache, jnp.asarray([[tok]], jnp.int32))
+    return out
 
 
 def main(argv=None) -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=8)
+    # --smoke was action="store_true", default=True — impossible to disable.
+    # It stays accepted for compat; --full is the actual override.
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="use the reduced smoke config (default; see --full)")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full-size architecture config")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-concurrency", type=int, default=8,
+                    help="engine cache slots (max in-flight requests)")
     ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32, help="max new tokens per request")
+    ap.add_argument("--chunk", type=int, default=16, help="prefill chunk size")
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="per-slot cache capacity (0 = prompt+gen)")
+    ap.add_argument("--arrival", type=float, default=0.0,
+                    help="mean arrivals per engine step (0 = all at step 0)")
+    ap.add_argument("--mixed", action="store_true",
+                    help="draw mixed prompt/gen lengths instead of fixed")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--eos-id", type=int, default=-1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh-model", type=int, default=1,
+                    help="model-axis size; data axis gets the rest of the devices")
+    ap.add_argument("--verify", action="store_true",
+                    help="replay each request through the sequential decode "
+                         "path and require identical outputs (temp 0)")
+    ap.add_argument("--json", default="", help="write the metrics summary here")
     args = ap.parse_args(argv)
 
     import jax
     import jax.numpy as jnp
 
     from repro.configs import get_arch, get_smoke
+    from repro.launch.mesh import make_host_mesh
     from repro.models import transformer as T
-    from repro.models.transformer import _run_encoder
+    from repro.serve import EngineConfig, ServeEngine
 
-    cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
-    key = jax.random.PRNGKey(0)
-    params = T.init_params(cfg, key, jnp.float32)
-    b = args.batch
-    max_len = args.prompt_len + args.gen
-    cache = T.init_cache(cfg, b, max_len, jnp.float32,
-                         enc_len=cfg.frontend_tokens if cfg.enc_dec else 0)
-    if cfg.enc_dec:
-        embeds = jax.random.normal(key, (b, cfg.frontend_tokens, cfg.d_model), jnp.float32)
-        cache["enc_out"] = _run_encoder(cfg, params, embeds, remat=False)
+    smoke = not args.full
+    cfg = get_smoke(args.arch) if smoke else get_arch(args.arch)
+    dtype = jnp.float32 if smoke else jnp.bfloat16
+    params = T.init_params(cfg, jax.random.PRNGKey(0), dtype)
+    max_len = args.max_len or (args.prompt_len + args.gen)
+    n_dev = len(jax.devices())
+    mesh = make_host_mesh(data=max(n_dev // args.mesh_model, 1), model=args.mesh_model)
 
-    prompts = np.random.default_rng(0).integers(0, cfg.vocab, size=(b, args.prompt_len))
-    step = jax.jit(lambda p, c, t: T.decode_step(cfg, p, c, t))
+    reqs = build_requests(args, cfg)
+    eng = ServeEngine(cfg, params, EngineConfig(
+        max_concurrency=args.max_concurrency, max_len=max_len,
+        chunk=args.chunk, dtype=dtype, seed=args.seed), mesh=mesh)
+    results = eng.run(reqs)
 
-    # Prefill via the decode path (one token at a time keeps one code path;
-    # a fused prefill kernel is the production variant -- see dryrun prefill).
-    t0 = time.time()
-    logits = None
-    for t in range(args.prompt_len):
-        logits, cache = step(params, cache, jnp.asarray(prompts[:, t:t + 1]))
-    prefill_s = time.time() - t0
+    summary = eng.metrics.summary()
+    print(f"arch={cfg.name} devices={n_dev} mesh={dict(mesh.shape)} "
+          f"slots={args.max_concurrency} chunk={eng.chunk} requests={len(reqs)}")
+    for st in results:
+        m = eng.metrics.requests[st.request.rid]
+        print(f"  req {st.request.rid:3d}: prompt={m.prompt_len:3d} "
+              f"gen={m.n_generated:3d} stop={st.stop:<10s} "
+              f"ttft={m.ttft_s*1e3:7.1f}ms tpot={m.tpot_s*1e3:6.1f}ms "
+              f"tokens={st.generated[:8]}{'...' if len(st.generated) > 8 else ''}")
+    print(f"throughput: {summary['tok_s']:.1f} gen tok/s "
+          f"({summary['total_tok_s']:.1f} incl. prefill) | "
+          f"mean TTFT {summary['mean_ttft_s']*1e3:.1f}ms | "
+          f"mean TPOT {summary['mean_tpot_s']*1e3:.1f}ms | "
+          f"{summary['prefill_chunks']} prefill chunks + "
+          f"{summary['decode_steps']} decode steps "
+          f"(traces: {eng.trace_counts})")
 
-    outs = []
-    t0 = time.time()
-    tok = jnp.argmax(logits[:, -1], axis=-1, keepdims=True).astype(jnp.int32)
-    for t in range(args.gen):
-        outs.append(np.asarray(tok)[:, 0])
-        logits, cache = step(params, cache, tok)
+    if args.verify:
         if args.temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(sub, logits[:, -1] / args.temperature)[:, None]
-            tok = tok.astype(jnp.int32)
-        else:
-            tok = jnp.argmax(logits[:, -1], axis=-1, keepdims=True).astype(jnp.int32)
-    decode_s = time.time() - t0
-    gen = np.stack(outs, axis=1)
-    print(f"arch={cfg.name} batch={b} prompt={args.prompt_len} gen={args.gen}")
-    print(f"prefill: {prefill_s:.2f}s  decode: {decode_s:.2f}s "
-          f"({b*args.gen/max(decode_s,1e-9):.1f} tok/s batched)")
-    print("sample token ids:", gen[0][:16].tolist())
+            raise SystemExit("--verify requires --temperature 0")
+        step = jax.jit(lambda p, c, t: T.decode_step(cfg, p, c, t))
+        bad = []
+        for st in results:
+            ref = sequential_reference(cfg, params, st.request, max_len, step)
+            if st.generated != ref:
+                bad.append(st.request.rid)
+        if bad:
+            raise SystemExit(f"VERIFY FAILED: engine != sequential decode for rids {bad}")
+        print(f"verify: all {len(results)} requests bit-identical to the "
+              f"sequential decode path")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=2)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -30,9 +30,11 @@ __all__ = [
     "init_attn",
     "attn_train",
     "attn_decode",
+    "attn_prefill",
     "init_mla",
     "mla_train",
     "mla_decode",
+    "mla_prefill",
     "init_ffn",
     "ffn_apply",
     "init_moe",
@@ -40,6 +42,7 @@ __all__ = [
     "init_mamba",
     "mamba_train",
     "mamba_decode",
+    "mamba_prefill",
     "init_cache_attn",
     "init_cache_mla",
     "init_cache_mamba",
@@ -73,6 +76,26 @@ def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
 def _dense(key, shape, dtype, scale=None):
     scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
     return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def _split_guard(y: jax.Array) -> jax.Array:
+    """Replication barrier before splitting a fused projection.
+
+    jnp.split at offsets that don't align with a sharded dim's tile
+    boundaries is miscompiled by the SPMD partitioner (jax 0.4.37,
+    verified on the CPU backend: slices crossing tile edges return
+    garbage) — and sharding *back-propagation* from a downstream
+    row-parallel matmul re-tiles the split input even when its weight is
+    replicated. Forcing the fused tensor replicated right before the
+    split keeps every slice local-and-correct; outside a mesh context
+    this is a no-op. Hit by: mamba's zxbcdt in_proj and conv channel
+    splits, MLA's wq (nope|rope) and w_dkv (latent|rope) splits."""
+    from jax.sharding import PartitionSpec as _P
+
+    try:
+        return jax.lax.with_sharding_constraint(y, _P(*([None] * y.ndim)))
+    except (ValueError, KeyError, RuntimeError, TypeError):
+        return y  # no mesh in scope (single-device paths)
 
 
 # ------------------------------------------------------------ GQA attention
@@ -174,29 +197,124 @@ def init_cache_attn(cfg: ArchConfig, batch: int, max_len: int, dtype) -> dict:
     }
 
 
-def attn_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array, cfg: ArchConfig) -> tuple[jax.Array, dict]:
-    """One-token decode. x (B,1,d); pos scalar int32 (absolute position).
+def _slot_positions(pos: jax.Array, batch: int) -> jax.Array:
+    """Scalar or (B,) positions -> (B,) int32 per-row positions."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (batch,))
+    return pos
+
+
+def _ring_mask(pos: jax.Array, size: int) -> jax.Array:
+    """(B,1,1,S) additive mask of written ring slots for per-row `pos`:
+    absolute positions in (pos-size, pos] — all slots once wrapped,
+    slot_index <= pos while filling."""
+    idx = jnp.arange(size)
+    written = jnp.where(pos >= size, size, pos + 1)          # (B,)
+    valid = idx[None, :] < written[:, None]                  # (B,S)
+    return jnp.where(valid, 0.0, _NEG)[:, None, None, :].astype(jnp.float32)
+
+
+def attn_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array, cfg: ArchConfig,
+                active: jax.Array | None = None) -> tuple[jax.Array, dict]:
+    """One-token decode. x (B,1,d); pos scalar int32 (absolute position,
+    whole batch in lockstep) or (B,) per-slot positions (the continuous-
+    batching serve path, where every slot is at its own depth).
 
     The cache is a ring buffer of `size` slots; for full attention
-    size == max_len and slot == pos."""
+    size == max_len and slot == pos. `active` (B,) bool gates the k/v
+    write per row: inactive rows (free/retired serve slots) leave the
+    cache untouched and their output is garbage-but-finite."""
     b, _, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
     size = cache["k"].shape[1]
+    pos = _slot_positions(pos, b)
     q, k, v = _qkv(p, x, cfg)
-    cos, sin = rope_freqs(pos[None], hd, cfg.rope_theta)  # (1, hd/2)
+    cos, sin = rope_freqs(pos[:, None], hd, cfg.rope_theta)  # (B, 1, hd/2)
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
     slot = jnp.mod(pos, size)
-    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
-    # Valid entries: absolute positions in (pos-size, pos], i.e. all written
-    # slots once full; (slot_index <= pos) while filling.
-    idx = jnp.arange(size)
-    written = jnp.where(pos >= size, size, pos + 1)
-    valid = idx < written
-    mask = jnp.where(valid, 0.0, _NEG)[None, None, None, :].astype(jnp.float32)  # (1,1,1,S)
-    out = _sdpa(q, ck, cv, mask[:, 0], h // kv)
+    if active is not None:
+        slot = jnp.where(active, slot, size)  # out-of-bounds => dropped
+    rows = jnp.arange(b)
+    ck = cache["k"].at[rows, slot].set(k[:, 0], mode="drop")
+    cv = cache["v"].at[rows, slot].set(v[:, 0], mode="drop")
+    mask = _ring_mask(pos, size)                             # (B,1,1,S)
+    out = _sdpa(q, ck, cv, mask, h // kv, logits_bf16=cfg.attn_logits_bf16)
     y = out.reshape(b, 1, h * hd) @ p["wo"]
+    return y, {"k": ck, "v": cv}
+
+
+def _prefill_write_slots(tok_pos: jax.Array, n_valid: jax.Array, size: int) -> jax.Array:
+    """(B,C) ring slots for a chunk write; invalid tokens (>= n_valid) go
+    out of bounds so scatter-with-drop leaves their slots untouched."""
+    c = tok_pos.shape[1]
+    valid = jnp.arange(c)[None, :] < n_valid[:, None]
+    return jnp.where(valid, jnp.mod(tok_pos, size), size)
+
+
+def _prefill_mask(pos: jax.Array, n_valid: jax.Array, c: int, size: int,
+                  window: int) -> jax.Array:
+    """(B,1,C,S+C) additive mask for chunked prefill over the concatenated
+    [pre-chunk cache snapshot | chunk keys].
+
+    Chunk token j of row r sits at absolute position pos[r]+j. Cache slot s
+    holds absolute position a_s = P - ((P - s) mod S) with P = pos-1 the
+    last pre-chunk write (a_s < 0 => never written). Attending the
+    *snapshot* (not the post-write cache) means within-chunk ring wraps can
+    never clobber a key an earlier query still needs; with window == S at
+    most one of {a_s, a_s + S} is ever inside a query's window, so the
+    concatenated view never double-counts a slot. Padding queries
+    (j >= n_valid) keep their own key so softmax stays finite."""
+    j = jnp.arange(c)
+    tok_pos = pos[:, None] + j[None, :]                      # (B,C)
+    valid_tok = j[None, :] < n_valid[:, None]                # (B,C)
+    # Cache snapshot part: written, and (sliding window) close enough.
+    idx = jnp.arange(size)
+    last = pos[:, None] - 1
+    a_s = last - jnp.mod(last - idx[None, :], size)          # (B,S)
+    cache_ok = jnp.broadcast_to(
+        (a_s >= 0)[:, None, :], (pos.shape[0], c, size))     # (B,C,S)
+    if window > 0:
+        cache_ok = cache_ok & ((tok_pos[:, :, None] - a_s[:, None, :]) < window)
+    # Chunk part: causal over real tokens; self-key unconditionally.
+    self_k = j[None, None, :] == j[None, :, None]            # (1,C,C)
+    chunk_ok = (j[None, None, :] <= j[None, :, None]) & (valid_tok[:, None, :] | self_k)
+    if window > 0:
+        chunk_ok = chunk_ok & ((j[None, :, None] - j[None, None, :]) < window)
+    ok = jnp.concatenate(
+        [cache_ok, jnp.broadcast_to(chunk_ok, (pos.shape[0], c, c))], axis=-1)
+    return jnp.where(ok, 0.0, _NEG)[:, None].astype(jnp.float32)
+
+
+def attn_prefill(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
+                 n_valid: jax.Array, cfg: ArchConfig) -> tuple[jax.Array, dict]:
+    """Chunked batched prefill writing straight into the decode ring cache.
+
+    x (B,C,d) — chunk of C tokens per row; pos (B,) absolute position of
+    each row's first chunk token; n_valid (B,) real tokens in the row's
+    chunk (0 => the row's cache is untouched). Queries attend the
+    pre-chunk cache snapshot plus the chunk's own keys, matching
+    attn_decode run token-at-a-time up to fp summation order. Requires
+    C <= ring size (the serve engine clamps its chunk accordingly)."""
+    b, c, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    size = cache["k"].shape[1]
+    assert c <= size, f"prefill chunk {c} exceeds ring buffer {size}"
+    q, k, v = _qkv(p, x, cfg)
+    tok_pos = pos[:, None] + jnp.arange(c)[None, :]          # (B,C)
+    cos, sin = rope_freqs(tok_pos, hd, cfg.rope_theta)       # (B,C,hd/2)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    slot = _prefill_write_slots(tok_pos, n_valid, size)
+    rows = jnp.arange(b)[:, None]
+    ck = cache["k"].at[rows, slot].set(k, mode="drop")
+    cv = cache["v"].at[rows, slot].set(v, mode="drop")
+    mask = _prefill_mask(pos, n_valid, c, size, cfg.sliding_window)
+    kk = jnp.concatenate([cache["k"], k], axis=1)            # snapshot + chunk
+    vv = jnp.concatenate([cache["v"], v], axis=1)
+    out = _sdpa(q, kk, vv, mask, h // kv, logits_bf16=cfg.attn_logits_bf16)
+    y = out.reshape(b, c, h * hd) @ p["wo"]
     return y, {"k": ck, "v": cv}
 
 
@@ -218,10 +336,10 @@ def init_mla(key: jax.Array, cfg: ArchConfig, dtype) -> dict:
 def _mla_qkv(p, x, cfg, cos, sin):
     b, l, d = x.shape
     h, m = cfg.n_heads, cfg.mla
-    q = (x @ p["wq"]).reshape(b, l, h, m.qk_nope_dim + m.qk_rope_dim)
+    q = _split_guard(x @ p["wq"]).reshape(b, l, h, m.qk_nope_dim + m.qk_rope_dim)
     q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
     q_rope = apply_rope(q_rope, cos, sin)
-    ckv = x @ p["w_dkv"]  # (b, l, lora + rope)
+    ckv = _split_guard(x @ p["w_dkv"])  # (b, l, lora + rope)
     c_kv, k_rope = jnp.split(ckv, [m.kv_lora_rank], axis=-1)
     c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
     k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]  # shared across heads
@@ -263,18 +381,43 @@ def init_cache_mla(cfg: ArchConfig, batch: int, max_len: int, dtype) -> dict:
     }
 
 
-def mla_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array, cfg: ArchConfig) -> tuple[jax.Array, dict]:
+def mla_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array, cfg: ArchConfig,
+               active: jax.Array | None = None) -> tuple[jax.Array, dict]:
+    """One-token MLA decode; pos scalar or (B,) per-slot (see attn_decode)."""
     b = x.shape[0]
     size = cache["c_kv"].shape[1]
-    cos, sin = rope_freqs(pos[None], cfg.mla.qk_rope_dim, cfg.rope_theta)
+    pos = _slot_positions(pos, b)
+    cos, sin = rope_freqs(pos[:, None], cfg.mla.qk_rope_dim, cfg.rope_theta)
     q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, cos, sin)
     slot = jnp.mod(pos, size)
-    cc = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv, (0, slot, 0))
-    cr = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope, (0, slot, 0))
-    idx = jnp.arange(size)
-    written = jnp.where(pos >= size, size, pos + 1)
-    mask = jnp.where(idx < written, 0.0, _NEG)[None, None, None, :].astype(jnp.float32)
+    if active is not None:
+        slot = jnp.where(active, slot, size)
+    rows = jnp.arange(b)
+    cc = cache["c_kv"].at[rows, slot].set(c_kv[:, 0], mode="drop")
+    cr = cache["k_rope"].at[rows, slot].set(k_rope[:, 0], mode="drop")
+    mask = _ring_mask(pos, size)                             # (B,1,1,S)
     y = _mla_attend(p, q_nope, q_rope, cc, cr, mask, cfg)
+    return y, {"c_kv": cc, "k_rope": cr}
+
+
+def mla_prefill(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
+                n_valid: jax.Array, cfg: ArchConfig) -> tuple[jax.Array, dict]:
+    """Chunked MLA prefill into the compressed-KV ring cache (see
+    attn_prefill for the chunk/snapshot semantics)."""
+    b, c, _ = x.shape
+    size = cache["c_kv"].shape[1]
+    assert c <= size, f"prefill chunk {c} exceeds ring buffer {size}"
+    tok_pos = pos[:, None] + jnp.arange(c)[None, :]
+    cos, sin = rope_freqs(tok_pos, cfg.mla.qk_rope_dim, cfg.rope_theta)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, cos, sin)
+    slot = _prefill_write_slots(tok_pos, n_valid, size)
+    rows = jnp.arange(b)[:, None]
+    cc = cache["c_kv"].at[rows, slot].set(c_kv, mode="drop")
+    cr = cache["k_rope"].at[rows, slot].set(k_rope, mode="drop")
+    mask = _prefill_mask(pos, n_valid, c, size, cfg.sliding_window)
+    ckv_all = jnp.concatenate([cache["c_kv"], c_kv], axis=1)
+    kr_all = jnp.concatenate([cache["k_rope"], k_rope], axis=1)
+    y = _mla_attend(p, q_nope, q_rope, ckv_all, kr_all, mask, cfg)
     return y, {"c_kv": cc, "k_rope": cr}
 
 
@@ -388,7 +531,7 @@ def _mamba_split(p, x, cfg):
     d_in = s.expand * cfg.d_model
     n_h = d_in // s.head_dim
     gn = s.n_groups * s.state_dim
-    zxbcdt = x @ p["in_proj"]
+    zxbcdt = _split_guard(x @ p["in_proj"])
     z, xc, bc, cc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in, 2 * d_in + gn, 2 * d_in + 2 * gn], axis=-1)
     return z, xc, bc, cc, dt, n_h, d_in
 
@@ -482,7 +625,7 @@ def mamba_train(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
     conv = sum(
         pad[:, i : i + l, :] * p["conv_w"][i] for i in range(s.d_conv)
     ) + p["conv_b"]
-    conv = jax.nn.silu(conv)
+    conv = _split_guard(jax.nn.silu(conv))
     xc, bc, cc = jnp.split(conv, [d_in, d_in + s.n_groups * s.state_dim], axis=-1)
     xh = xc.reshape(b, l, n_h, s.head_dim)
     bb = bc.reshape(b, l, s.n_groups, s.state_dim)
@@ -521,15 +664,17 @@ def init_cache_mamba(cfg: ArchConfig, batch: int, dtype) -> dict:
     }
 
 
-def mamba_decode(p: dict, x: jax.Array, cache: dict, cfg: ArchConfig) -> tuple[jax.Array, dict]:
-    """O(1) recurrent step. x (B,1,d)."""
+def mamba_decode(p: dict, x: jax.Array, cache: dict, cfg: ArchConfig,
+                 active: jax.Array | None = None) -> tuple[jax.Array, dict]:
+    """O(1) recurrent step. x (B,1,d). `active` (B,) bool gates the
+    conv/ssm state advance per row (inactive serve slots stay frozen)."""
     s = cfg.ssm
     b = x.shape[0]
     z, xc, bc, cc, dt, n_h, d_in = _mamba_split(p, x, cfg)
     xbc = jnp.concatenate([xc, bc, cc], axis=-1)         # (b,1,conv_dim)
     window = jnp.concatenate([cache["conv"], xbc], axis=1)  # (b,d_conv,conv_dim)
     conv = jnp.einsum("btc,tc->bc", window, p["conv_w"]) + p["conv_b"]
-    conv = jax.nn.silu(conv)[:, None, :]
+    conv = _split_guard(jax.nn.silu(conv)[:, None, :])
     new_conv_cache = window[:, 1:, :]
     xc, bc, cc = jnp.split(conv, [d_in, d_in + s.n_groups * s.state_dim], axis=-1)
     xh = xc.reshape(b, n_h, s.head_dim)
@@ -548,4 +693,28 @@ def mamba_decode(p: dict, x: jax.Array, cache: dict, cfg: ArchConfig) -> tuple[j
     y = jnp.einsum("bhpn,bhn->bhp", st, cvh) + xh * p["D"].astype(xh.dtype)[:, None]
     y = y.reshape(b, 1, d_in)
     y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    if active is not None:
+        new_conv_cache = jnp.where(active[:, None, None], new_conv_cache, cache["conv"])
+        st = jnp.where(active[:, None, None, None], st, cache["ssm"])
     return y @ p["out_proj"], {"conv": new_conv_cache, "ssm": st}
+
+
+def mamba_prefill(p: dict, x: jax.Array, cache: dict, n_valid: jax.Array,
+                  cfg: ArchConfig) -> tuple[jax.Array, dict]:
+    """Chunked prefill for the recurrent mixer: scans the O(1) decode step
+    over the chunk inside one program, gating the conv/ssm state advance
+    per token so rows with different n_valid advance exactly that many
+    steps — bit-identical to mamba_decode run token-at-a-time. (The SSD
+    chunk-parallel formulation is the TPU production variant; at serve
+    chunk sizes the recurrence is one fused scan and not the bottleneck —
+    attention prefill is.)"""
+    b, c, _ = x.shape
+
+    def body(carry, inp):
+        xt, t = inp
+        y, nc = mamba_decode(p, xt, carry, cfg, active=t < n_valid)
+        return nc, y[:, 0]
+
+    xs = (jnp.moveaxis(x, 0, 1)[:, :, None, :], jnp.arange(c))
+    new_cache, ys = jax.lax.scan(body, cache, xs)
+    return jnp.moveaxis(ys, 0, 1), new_cache

@@ -31,6 +31,7 @@ __all__ = [
     "loss_fn",
     "init_cache",
     "decode_step",
+    "prefill_chunk",
 ]
 
 
@@ -269,11 +270,18 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
 
 
 def decode_step(cfg: ArchConfig, params: dict, cache: dict, token: jax.Array,
-                unroll: bool = False):
-    """token (B, 1) int32 -> (logits (B, 1, V), new cache). serve_step body."""
+                unroll: bool = False, positions: jax.Array | None = None,
+                active: jax.Array | None = None):
+    """token (B, 1) int32 -> (logits (B, 1, V), new cache). serve_step body.
+
+    Legacy lockstep mode (positions=None): every row is at cache["pos"],
+    which advances by one. Slot mode (the continuous-batching serve path):
+    ``positions`` (B,) gives each row its own absolute position and
+    ``active`` (B,) bool freezes the cache of free/retired slots; the
+    caller owns position tracking and cache["pos"] is left untouched."""
     dtype = params["embed"].dtype
     x = params["embed"][token].astype(dtype)
-    pos = cache["pos"]
+    pos = cache["pos"] if positions is None else positions
     enc_out = cache.get("enc_out")
 
     def body(carry, scanned):
@@ -289,11 +297,14 @@ def decode_step(cfg: ArchConfig, params: dict, cache: dict, token: jax.Array,
             hn = L.rms_norm(h, p["norm1"], cfg.norm_eps)
             if kind == "attn":
                 if cfg.attn_type == "mla":
-                    out, nc = L.mla_decode(p["mixer"], hn, bc[f"slot{i}"], pos, cfg)
+                    out, nc = L.mla_decode(p["mixer"], hn, bc[f"slot{i}"], pos, cfg,
+                                           active=active)
                 else:
-                    out, nc = L.attn_decode(p["mixer"], hn, bc[f"slot{i}"], pos, cfg)
+                    out, nc = L.attn_decode(p["mixer"], hn, bc[f"slot{i}"], pos, cfg,
+                                            active=active)
             else:
-                out, nc = L.mamba_decode(p["mixer"], hn, bc[f"slot{i}"], cfg)
+                out, nc = L.mamba_decode(p["mixer"], hn, bc[f"slot{i}"], cfg,
+                                         active=active)
             h = h + out
             new_bc[f"slot{i}"] = nc
             fk = cfg.ffn_kind(i)
@@ -306,7 +317,7 @@ def decode_step(cfg: ArchConfig, params: dict, cache: dict, token: jax.Array,
                 h = h + out
         if cp is not None:
             hn = L.rms_norm(h, cp["norm"], cfg.norm_eps)
-            cos, sin = L.rope_freqs(pos[None], cfg.head_dim_, cfg.rope_theta)
+            cos, sin = L.rope_freqs(jnp.atleast_1d(pos), cfg.head_dim_, cfg.rope_theta)
             h = h + L.attn_train(cp["mixer"], hn, cfg, cos, sin, kv_override=enc_out)
         return h, new_bc
 
@@ -320,5 +331,81 @@ def decode_step(cfg: ArchConfig, params: dict, cache: dict, token: jax.Array,
     logits = x @ head
     new_cache = dict(cache)
     new_cache["slots"] = new_slots
-    new_cache["pos"] = pos + 1
+    if positions is None:
+        new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+def prefill_chunk(cfg: ArchConfig, params: dict, cache: dict, tokens: jax.Array,
+                  positions: jax.Array, n_valid: jax.Array, unroll: bool = False):
+    """Chunked batched prefill writing straight into the decode cache.
+
+    tokens (B, C) int32 — the next chunk of each slot's prompt, right-
+    padded; positions (B,) absolute position of each row's first chunk
+    token; n_valid (B,) real tokens per row (0 => the row — a decoding or
+    free slot — is untouched). Returns (logits (B, C, V), new cache);
+    logits at j >= n_valid[r] are garbage-but-finite, and cache["pos"] is
+    never consulted (per-slot positions are the caller's). Replaces the
+    token-at-a-time prefill loop: one call advances every prefilling slot
+    by up to C tokens, sharing the decode-path cache layout and numerics
+    (attention sums differ only in fp reduction order; the recurrent
+    mixer is bit-identical)."""
+    dtype = params["embed"].dtype
+    x = params["embed"][tokens].astype(dtype)
+    enc_out = cache.get("enc_out")
+
+    def body(carry, scanned):
+        h = carry
+        if cfg.enc_dec:
+            bp, cp, bc = scanned
+        else:
+            (bp, bc), cp = scanned, None
+        new_bc = {}
+        for i in range(len(cfg.block_pattern)):
+            p = bp[f"slot{i}"]
+            kind = cfg.block_pattern[i]
+            hn = L.rms_norm(h, p["norm1"], cfg.norm_eps)
+            if kind == "attn":
+                if cfg.attn_type == "mla":
+                    out, nc = L.mla_prefill(p["mixer"], hn, bc[f"slot{i}"],
+                                            positions, n_valid, cfg)
+                else:
+                    out, nc = L.attn_prefill(p["mixer"], hn, bc[f"slot{i}"],
+                                             positions, n_valid, cfg)
+            else:
+                out, nc = L.mamba_prefill(p["mixer"], hn, bc[f"slot{i}"], n_valid, cfg)
+            h = h + out
+            new_bc[f"slot{i}"] = nc
+            fk = cfg.ffn_kind(i)
+            if fk != "none":
+                hn = L.rms_norm(h, p["norm2"], cfg.norm_eps)
+                if fk == "moe":
+                    # Dispatch per token (groups of length 1), matching the
+                    # decode path's capacity semantics exactly: a chunk-wide
+                    # group would use capacity ~ chunk*top_k/E and can drop
+                    # tokens that token-at-a-time decode never drops,
+                    # breaking the bit-identical-to-sequential contract.
+                    bb, cc_, dd = hn.shape
+                    out, _ = L.moe_apply(p["ffn"], hn.reshape(bb * cc_, 1, dd), cfg)
+                    out = out.reshape(bb, cc_, dd)
+                else:
+                    out = L.ffn_apply(p["ffn"], hn)
+                h = h + out
+        if cp is not None:
+            # Cross-attention is NoPE over the encoder output (the
+            # kv_override path never applies rope), so no per-row freqs.
+            hn = L.rms_norm(h, cp["norm"], cfg.norm_eps)
+            h = h + L.attn_train(cp["mixer"], hn, cfg, None, None, kv_override=enc_out)
+        return h, new_bc
+
+    if cfg.enc_dec:
+        xs = (params["blocks"], params["cross"], cache["slots"])
+    else:
+        xs = (params["blocks"], cache["slots"])
+    x, new_slots = jax.lax.scan(body, x, xs, unroll=True if unroll else 1)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ head
+    new_cache = dict(cache)
+    new_cache["slots"] = new_slots
     return logits, new_cache

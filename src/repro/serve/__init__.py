@@ -1,0 +1,23 @@
+"""Continuous-batching inference subsystem over the sharded KV-cache path.
+
+The serving half of the codebase: a slot-based engine that admits and
+retires requests per decode step over the ring-buffer decode cache
+(`engine.ServeEngine`), a chunked batched prefill planner that writes
+straight into the decode cache layout (`prefill`), FCFS admission with
+per-request stop conditions (`scheduler`), and TTFT/TPOT/throughput
+accounting (`metrics`).
+"""
+from repro.serve.engine import EngineConfig, ServeEngine
+from repro.serve.metrics import EngineMetrics, RequestMetrics
+from repro.serve.scheduler import FCFSScheduler, Phase, Request, RequestState
+
+__all__ = [
+    "EngineConfig",
+    "ServeEngine",
+    "EngineMetrics",
+    "RequestMetrics",
+    "FCFSScheduler",
+    "Phase",
+    "Request",
+    "RequestState",
+]

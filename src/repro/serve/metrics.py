@@ -1,0 +1,94 @@
+"""Per-request TTFT/TPOT and engine throughput counters.
+
+TTFT is measured from the moment a request became *eligible* (its arrival
+step was reached — queueing delay included) to its first sampled token;
+TPOT is the mean inter-token time over the remaining generated tokens.
+Engine counters track how the work was batched: prefill chunks vs decode
+steps vs idle steps, prompt tokens written and tokens generated.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+__all__ = ["RequestMetrics", "EngineMetrics"]
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    rid: int
+    prompt_len: int = 0
+    n_generated: int = 0
+    arrival_step: int = 0
+    admit_step: int = -1
+    finish_step: int = -1
+    eligible_wall: float = 0.0
+    first_token_wall: float = 0.0
+    finish_wall: float = 0.0
+
+    @property
+    def ttft_s(self) -> float:
+        return self.first_token_wall - self.eligible_wall
+
+    @property
+    def tpot_s(self) -> float:
+        return (self.finish_wall - self.first_token_wall) / max(self.n_generated - 1, 1)
+
+
+class EngineMetrics:
+    """Aggregates request records + engine step counters."""
+
+    def __init__(self):
+        self.requests: dict[int, RequestMetrics] = {}
+        self.engine_steps = 0
+        self.prefill_chunks = 0
+        self.decode_steps = 0
+        self.idle_steps = 0
+        self.prompt_tokens = 0
+        self.piggyback_tokens = 0   # prompt tokens streamed via decode steps
+        self.generated_tokens = 0
+        self._pause_total = 0.0
+        self._t0 = time.perf_counter()
+        self._t_last = self._t0
+
+    def now(self) -> float:
+        """Active-time clock: wall time minus credited pauses."""
+        return time.perf_counter() - self._pause_total
+
+    def note_pause(self, dt: float) -> None:
+        """Credit a deliberate pause (e.g. a benchmark sleeping off a CPU
+        quota) so throughput/latency reflect active time only."""
+        self._pause_total += dt
+
+    def start(self) -> None:
+        self._t0 = self.now()
+        self._t_last = self._t0
+
+    def touch(self) -> None:
+        self._t_last = self.now()
+
+    @property
+    def wall_s(self) -> float:
+        return self._t_last - self._t0
+
+    def summary(self) -> dict:
+        done = [m for m in self.requests.values() if m.finish_wall > 0]
+        wall = max(self.wall_s, 1e-9)
+        return {
+            "requests_finished": len(done),
+            "engine_steps": self.engine_steps,
+            "prefill_chunks": self.prefill_chunks,
+            "decode_steps": self.decode_steps,
+            "idle_steps": self.idle_steps,
+            "prompt_tokens": self.prompt_tokens,
+            "piggyback_tokens": self.piggyback_tokens,
+            "generated_tokens": self.generated_tokens,
+            "wall_s": wall,
+            "tok_s": self.generated_tokens / wall,
+            "total_tok_s": (self.prompt_tokens + self.generated_tokens) / wall,
+            "mean_ttft_s": float(np.mean([m.ttft_s for m in done])) if done else 0.0,
+            "p50_ttft_s": float(np.median([m.ttft_s for m in done])) if done else 0.0,
+            "mean_tpot_s": float(np.mean([m.tpot_s for m in done])) if done else 0.0,
+        }

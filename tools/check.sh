@@ -11,14 +11,24 @@
 #                             (The subprocess tests pin their own device
 #                             counts before importing jax, so the outer flag
 #                             never leaks into their XLA configuration.)
+#   tools/check.sh --serve    serve lane: the continuous-batching engine +
+#                             chunked-prefill tests under 8 virtual CPU
+#                             devices, so the sharded decode/prefill
+#                             programs (cache/slot sharding over the mesh)
+#                             are exercised for real, not just on 1 device.
 #
-# Extra args are forwarded to pytest in both lanes.
+# Extra args are forwarded to pytest in all lanes.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 if [[ "${1:-}" == "--dist" ]]; then
   shift
   XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m "slow" "$@"
+elif [[ "${1:-}" == "--serve" ]]; then
+  shift
+  XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
+    tests/test_serve_engine.py tests/test_decode_consistency.py "$@"
 else
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m "not slow" "$@"
 fi
