@@ -26,6 +26,7 @@ MODULES = [
     "prop1_quant_saving",
     "round_engine_bench",
     "serve_engine_bench",
+    "sim_scenarios_bench",
     "pod_gossip_roofline",
 ]
 

@@ -1,0 +1,52 @@
+"""Virtual-time asynchronous DFedRW: partial updates vs dropping stragglers.
+
+Runs the `straggler_tail` scenario (lognormal heavy-tailed device rates
+under a wall-clock aggregation deadline) twice at identical protocol seeds
+and timing draws — once aggregating each chain's completed prefix (the
+paper's Eq. 11/14 partial updates) and once discarding unfinished chains
+(the FedAvg-style baseline) — then a churn run where devices drop offline
+mid-walk. Prints per-eval accuracy with the virtual-time column.
+
+Usage:  PYTHONPATH=src python examples/async_straggler_sim.py
+"""
+import jax
+
+from repro.sim import build_scenario
+
+N, SEED, ROUNDS = 20, 0, 24
+
+
+def run(name: str, **overrides):
+    setup = build_scenario(name, n=N, seed=SEED, rounds=ROUNDS, **overrides)
+    runner = setup.runner()
+    label = f"{name}/{setup.sim.policy}"
+    print(f"\n== {label}: deadline={setup.sim.deadline_s}s "
+          f"bits={setup.cfg.quant.bits}")
+
+    def cb(r, metrics, evald, record):
+        print(f"  round {record.round:3d}  t={record.t_end:7.1f}s  "
+              f"acc={evald['accuracy']:.3f}  "
+              f"truncated={record.truncated_chains} "
+              f"dropped={record.dropped_chains} "
+              f"killed={int(record.killed.sum())}")
+
+    result = runner.run(setup.rounds, jax.random.PRNGKey(SEED),
+                        setup.x_test, setup.y_test, eval_every=6, callback=cb)
+    final = result.final()
+    print(f"  final acc={final['accuracy']:.3f} "
+          f"virtual_time={final['virtual_time_s']:.0f}s "
+          f"events={final['events_total']}")
+    return final
+
+
+def main() -> None:
+    partial = run("straggler_tail", policy="partial")
+    drop = run("straggler_tail", policy="drop")
+    print(f"\npartial-update aggregation beats drop-stragglers by "
+          f"{partial['accuracy'] - drop['accuracy']:+.3f} accuracy "
+          f"at the same virtual deadline budget")
+    run("churn_dropout")
+
+
+if __name__ == "__main__":
+    main()

@@ -471,7 +471,20 @@ class DFedRW:
 
     # ------------------------------------------------------------- host side
     def _plan_round(self, state: DFedRWState) -> tuple[WalkPlan, np.ndarray, tuple]:
-        cfg, topo, rng = self.cfg, self.topo, self.rng
+        plan, bidx = self.plan_walks(state)
+        agg = self.plan_aggregation(plan)
+        return plan, bidx, agg
+
+    def plan_walks(
+        self, state: DFedRWState, topo: Topology | None = None
+    ) -> tuple[WalkPlan, np.ndarray]:
+        """Sample the round's M walk trajectories plus their per-step batch
+        indices (one protocol-rng draw order shared by every engine and by
+        the virtual-time simulator — repro.sim truncates the returned plan
+        before building the aggregation plan). ``topo`` overrides the bound
+        topology (time-varying graphs)."""
+        cfg, rng = self.cfg, self.rng
+        topo = self.topo if topo is None else topo
         plan = sample_walks(
             topo,
             cfg.m_chains,
@@ -499,19 +512,35 @@ class DFedRW:
             tiled = np.tile(sub, (1, reps))[:, : cfg.batch_size]
             bidx = np.where(slow[flat_dev][:, None], tiled, bidx)
         bidx = bidx.reshape(cfg.m_chains, cfg.k_walk, cfg.batch_size)
+        return plan, bidx
 
-        # Aggregation plan. Shapes are padded to fixed sizes (pad slots use
-        # device id n and zero weight; the jitted scatter drops them) so the
-        # round function compiles exactly once per config.
+    def plan_aggregation(
+        self, plan: WalkPlan, topo: Topology | None = None
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Build the round's (agg_devices, agg_rows, agg_weights) from the
+        (possibly deadline-truncated) walk plan. Shapes are padded to fixed
+        sizes (pad slots use device id >= n and zero weight; the jitted
+        scatter drops them) so the round function compiles exactly once per
+        config."""
+        cfg, rng = self.cfg, self.rng
+        topo = self.topo if topo is None else topo
         participants = np.unique(plan.devices[plan.mask])
         sizes = self.data.client_sizes
         if cfg.chain_mode:
             # §VI-F: N_A(i) = the other chains' end devices; aggregators are
             # exactly the (unique) chain-end devices, padded to M rows.
-            agg_devices = np.unique(plan.last_device)
+            # Zero-length chains (deadline/churn truncation to k_m = 0, or a
+            # dropped straggler — never produced by the synchronous planner,
+            # which floors k_m at 1) performed no step: their "end" device is
+            # just the start device holding stale params, so they neither
+            # aggregate nor contribute (zero weight).
+            alive = plan.k_m > 0
+            agg_devices = np.unique(plan.last_device[alive])
             rows = np.tile(plan.last_device, (len(agg_devices), 1))
-            w = sizes[plan.last_device].astype(np.float64)
-            weights = np.tile(w / w.sum(), (len(agg_devices), 1))
+            w = sizes[plan.last_device].astype(np.float64) * alive
+            wsum = w.sum()
+            weights = np.tile(w / (wsum if wsum > 0 else 1.0),
+                              (len(agg_devices), 1))
             pad = cfg.m_chains - len(agg_devices)
             if pad > 0:
                 # Distinct out-of-range ids so the jitted scatter can keep
@@ -526,7 +555,7 @@ class DFedRW:
             row_list, weight_list = [], []
             part_set = set(participants.tolist())
             for i in agg_devices:
-                nbrs = [j for j in self.topo.neighbors(i, include_self=True)
+                nbrs = [j for j in topo.neighbors(i, include_self=True)
                         if j in part_set or j == i]
                 rng.shuffle(nbrs)
                 nbrs = np.array(nbrs[:n_agg], dtype=np.int64)
@@ -542,7 +571,7 @@ class DFedRW:
             weights = np.stack(weight_list)
         agg_rows = rows.astype(np.int32)
         agg_w = weights.astype(np.float32)
-        return plan, bidx, (agg_devices.astype(np.int32), agg_rows, agg_w)
+        return (agg_devices.astype(np.int32), agg_rows, agg_w)
 
     def _comm_cost_bits(self, plan: WalkPlan, agg: tuple, d_params: int) -> tuple[float, float]:
         """Eq. 18 comm accounting (vectorized: one bincount over hop edges and
@@ -568,8 +597,24 @@ class DFedRW:
 
     # ------------------------------------------------------------------- run
     def run_round(self, state: DFedRWState, key: jax.Array) -> tuple[DFedRWState, RoundMetrics]:
-        cfg = self.cfg
         plan, bidx, agg = self._plan_round(state)
+        return self.execute_round(state, plan, bidx, agg, key)
+
+    def execute_round(
+        self,
+        state: DFedRWState,
+        plan: WalkPlan,
+        bidx: np.ndarray,
+        agg: tuple,
+        key: jax.Array,
+        account_plan: WalkPlan | None = None,
+    ) -> tuple[DFedRWState, RoundMetrics]:
+        """Run one planned round through the jitted engine and update the
+        protocol state. ``plan`` may be a (deadline/churn-)truncated version
+        of the sampled plan; ``account_plan`` optionally charges Eq. 18 comm
+        for a different plan than the one computed (the drop-stragglers
+        baseline pays for hops whose updates it then discards)."""
+        cfg = self.cfg
         agg_devices, agg_rows, agg_w = agg
         new_params, loss, gamma_hat = self._round_fn(
             state.device_params,
@@ -589,7 +634,8 @@ class DFedRW:
                 "across rounds (this forfeits compiled-executable reuse)",
                 stacklevel=2,
             )
-        tot, busiest = self._comm_cost_bits(plan, agg, self.flat_spec.d)
+        acct = plan if account_plan is None else account_plan
+        tot, busiest = self._comm_cost_bits(acct, agg, self.flat_spec.d)
         updated = (state.updated.copy() if state.updated is not None
                    else np.zeros(self.topo.n, dtype=bool))
         updated[np.unique(plan.devices[plan.mask])] = True

@@ -20,6 +20,7 @@ __all__ = [
     "expander_graph",
     "star_graph",
     "erdos_renyi_graph",
+    "is_connected",
     "metropolis_hastings_matrix",
     "lambda_p",
     "mixing_time",
@@ -102,14 +103,39 @@ def star_graph(n: int) -> np.ndarray:
     return _with_self_loops(adj)
 
 
-def erdos_renyi_graph(n: int, p: float, seed: int = 0) -> np.ndarray:
-    rng = np.random.default_rng(seed)
-    adj = rng.random((n, n)) < p
-    adj = np.triu(adj, 1)
-    # Ensure connectivity via a ring backbone.
-    idx = np.arange(n)
-    adj[idx, (idx + 1) % n] = True
-    return _with_self_loops(adj)
+def is_connected(adjacency: np.ndarray) -> bool:
+    """True iff the graph has one component (self-loops/direction ignored)."""
+    adj = adjacency.astype(bool)
+    adj |= adj.T
+    reach = np.zeros(adj.shape[0], dtype=bool)
+    reach[0] = True
+    while True:
+        new = reach | (adj @ reach)
+        if (new == reach).all():
+            return bool(reach.all())
+        reach = new
+
+
+def erdos_renyi_graph(n: int, p: float, seed: int = 0, max_tries: int = 200) -> np.ndarray:
+    """True G(n, p) draw, resampled until connected.
+
+    A disconnected draw has a second unit-magnitude eigenvalue, so
+    lambda_P = 1 (Definition 4) and the MH walk never mixes across
+    components — rejection sampling keeps the graph a genuine ER draw
+    *conditioned on connectivity* instead of silently grafting a ring
+    backbone onto it. Deterministic given (n, p, seed); raises when no
+    connected draw appears within ``max_tries`` (p below the ~ln(n)/n
+    connectivity threshold)."""
+    for t in range(max_tries):
+        rng = np.random.default_rng([seed, t])
+        adj = _with_self_loops(np.triu(rng.random((n, n)) < p, 1))
+        if is_connected(adj):
+            return adj
+    raise ValueError(
+        f"no connected G(n={n}, p={p}) draw in {max_tries} tries; "
+        f"p is likely below the ln(n)/n ~ {np.log(max(n, 2)) / max(n, 1):.3f} "
+        "connectivity threshold"
+    )
 
 
 def metropolis_hastings_matrix(adjacency: np.ndarray, lazy: float = 0.1) -> np.ndarray:

@@ -26,11 +26,16 @@ class WalkPlan:
                                  (chain m performs K_m <= K_max steps).
     k_m:     (M,) int32       — realized per-chain walk lengths.
     last_device: (M,) int32   — device holding w^{t,last} of each chain.
+    timestamps: (M, K_max) f64 | None — virtual-time completion instant of
+        each hop's local step, filled in by the discrete-event simulator
+        (repro.sim); NaN where the step never executed. The synchronous
+        engine leaves it None.
     """
 
     devices: np.ndarray
     mask: np.ndarray
     k_m: np.ndarray
+    timestamps: np.ndarray | None = None
 
     @property
     def last_device(self) -> np.ndarray:
@@ -44,6 +49,24 @@ class WalkPlan:
     @property
     def k_max(self) -> int:
         return self.devices.shape[1]
+
+    def truncated(
+        self, k_new: np.ndarray, timestamps: np.ndarray | None = None
+    ) -> "WalkPlan":
+        """Deadline/churn truncation hook: the same trajectories, cut to
+        ``min(k_m, k_new)`` completed steps per chain (k_new may be 0 — a
+        chain that never finished a step contributes nothing). The truncated
+        plan feeds Eq. 18 comm accounting and the Eq. 11/14 partial-update
+        aggregation exactly like a straggler-shortened walk."""
+        k_m = np.minimum(self.k_m, np.asarray(k_new, dtype=np.int32))
+        k_m = np.maximum(k_m, 0).astype(np.int32)
+        mask = np.arange(self.k_max)[None, :] < k_m[:, None]
+        return WalkPlan(
+            devices=self.devices,
+            mask=mask,
+            k_m=k_m,
+            timestamps=self.timestamps if timestamps is None else timestamps,
+        )
 
 
 @dataclasses.dataclass(frozen=True)

@@ -42,6 +42,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 __all__ = [
     "spec_for_leaf",
     "param_specs",
+    "opt_specs",
     "batch_specs",
     "cache_specs",
     "serve_arg_specs",
@@ -146,6 +147,47 @@ def param_specs(params: Any, mesh, fed_axis: str | None = None) -> Any:
         parts = [_key_str(k) for k in kp]
         n_stack = 1 if parts and parts[0] in _STACKED_ROOTS else 0
         spec = spec_for_leaf("/".join(parts), leaf.shape, mesh, n_stack)
+        if fed_axis is not None:
+            spec = P(fed_axis, *tuple(spec))
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_specs(params: Any, mesh, fed_axis: str | None = None) -> Any:
+    """PartitionSpecs for *optimizer-state* mirrors of ``params`` (momentum
+    velocities, Adam moments, fp32 master copies).
+
+    Optimizer state joins no matmul — it is only read and written
+    elementwise in the update — so it is free to shard where the params
+    cannot: wherever the param rules fall back to full replication (1-D
+    norm scales/biases, indivisible dims, the SSM conv weights), the state
+    leaf is ZeRO-style sharded over the ``data`` axis on the first dim it
+    divides (including stacked leading dims, which ARE shardable here: the
+    scan-carry constraint that pins them for params does not apply to a
+    zeros_like mirror). Leaves whose param spec already uses a mesh axis
+    keep it unchanged, so the elementwise update stays collective-free.
+
+    This is what lets fp32 masters + 8-bit moments (2-6x the bf16 param
+    bytes) live on a mesh whose params are memory-bound: at bf16 params /
+    fp32+fp32 momentum state, replicated state would triple the replicated
+    footprint.
+    """
+    sizes = _sizes(mesh)
+
+    def one(kp, leaf):
+        parts = [_key_str(k) for k in kp]
+        n_stack = 1 if parts and parts[0] in _STACKED_ROOTS else 0
+        spec = spec_for_leaf("/".join(parts), leaf.shape, mesh, n_stack)
+        if all(ax is None for ax in spec):
+            dsize = sizes.get("data")
+            if dsize:
+                upgraded: list = [None] * len(leaf.shape)
+                for d, dim in enumerate(leaf.shape):
+                    if dim % dsize == 0:
+                        upgraded[d] = "data"
+                        break
+                spec = P(*upgraded)
         if fed_axis is not None:
             spec = P(fed_axis, *tuple(spec))
         return spec

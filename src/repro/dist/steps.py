@@ -13,6 +13,10 @@ in_shardings=named(specs, mesh))`` or ``jax.device_put`` real arrays:
 * ``make_gossip_step`` — per-pod stacked params mixed with the
   dist.gossip ring/expander weights (doubly stochastic, so the global mean
   over the pod axis is preserved — paper Eq. 11 at pod scale).
+* ``opt_specs`` (re-exported from dist.sharding) — PartitionSpecs for
+  optimizer-state mirrors: fp32 masters and 8-bit moments can shard
+  differently from bf16 params (ZeRO-style data-sharding of leaves the
+  param rules replicate).
 * ``make_fed_train_step`` — the decomposed DFedRW deployment: per-pod local
   momentum-SGD steps (no cross-pod collectives) + a gossip mix every
   ``gossip.every`` steps, quantizing payloads when ``gossip.quant_bits < 32``
@@ -24,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.gossip import GossipConfig, gossip_mix
-from repro.dist.sharding import param_specs
+from repro.dist.sharding import opt_specs, param_specs
 from repro.models import transformer as T
 from repro.models.config import ArchConfig
 from repro.optim.sgd import decreasing_lr, momentum_sgd
@@ -35,6 +39,7 @@ __all__ = [
     "make_prefill_step",
     "make_gossip_step",
     "make_fed_train_step",
+    "opt_specs",
 ]
 
 
@@ -43,8 +48,11 @@ def make_train_step(cfg: ArchConfig, mesh, *, lr_r: float = 5.0,
                     unroll: bool = False):
     """step_fn(params, vel, batch, step) -> (params, vel, loss).
 
-    ``vel`` is a zeros_like mirror of ``params`` (momentum). The learning
-    rate follows the paper's decreasing schedule 1/(lr_r * (step+1)^q)."""
+    ``vel`` is a zeros_like mirror of ``params`` (momentum); place it with
+    ``opt_specs(abstract_params, mesh)`` when its precision differs from the
+    params' (fp32 masters / 8-bit moments next to bf16 weights — the state
+    may shard where params replicate). The learning rate follows the
+    paper's decreasing schedule 1/(lr_r * (step+1)^q)."""
     p_specs = param_specs(T.abstract_params(cfg), mesh)
 
     def step_fn(params, vel, batch, step):

@@ -1,0 +1,33 @@
+"""repro.sim: discrete-event asynchronous DFedRW simulator.
+
+Virtual wall-clock device/link models + churn over the flat round engine:
+the event loop (events.py) schedules walk hops and local SGD steps on a
+virtual clock, deadlines truncate in-flight walks into the paper's
+partial-update aggregation, and all compute replays through the synchronous
+flat engine in one jitted call per deadline window (see runner.py for why
+that is bit-exact). scenarios.py is the declarative registry the launcher
+(repro.launch.sim), benchmarks and tests share.
+"""
+from repro.sim.devices import DeviceFleet, DeviceModelConfig
+from repro.sim.events import Event, EventQueue
+from repro.sim.links import LinkModel, LinkModelConfig, segment_wire_bits
+from repro.sim.runner import AsyncDFedRW, SimConfig, SimResult, SimRoundRecord
+from repro.sim.scenarios import (
+    SCENARIOS,
+    SimScenario,
+    SimSetup,
+    build_scenario,
+    get_scenario,
+    list_scenarios,
+    partitioned_topology,
+    register_scenario,
+)
+
+__all__ = [
+    "Event", "EventQueue",
+    "DeviceFleet", "DeviceModelConfig",
+    "LinkModel", "LinkModelConfig", "segment_wire_bits",
+    "AsyncDFedRW", "SimConfig", "SimResult", "SimRoundRecord",
+    "SCENARIOS", "SimScenario", "SimSetup", "build_scenario", "get_scenario",
+    "list_scenarios", "partitioned_topology", "register_scenario",
+]

@@ -1,0 +1,129 @@
+"""Per-device wall-clock compute-rate and availability/churn models.
+
+System heterogeneity in the synchronous engine is *pre-drawn* chain lengths
+(core.walk.StragglerModel); here it is a wall-clock phenomenon: device ``d``
+takes ``base_step_time / rate[d]`` seconds of virtual time per local SGD
+step, and a renewal availability process takes it offline for whole
+intervals. Deadlines, overlap, and dropout then *emerge* from the event
+timeline instead of being sampled.
+
+Rate distributions (all with median ~1 so ``base_step_time`` stays the
+median step cost):
+
+* ``uniform``    — every device at rate 1.0 (the parity configuration).
+* ``lognormal``  — ``exp(N(0, sigma))``; heavy left tail of slow devices,
+                   the classic device-capability spread of DFL surveys.
+* ``pareto``     — step-time multiplier ``1 + Pareto(alpha)``; the extreme
+                   straggler tail regime.
+* ``two_class``  — the paper's §VI-A h%: a fixed fraction of devices is
+                   ``slowdown``x slower.
+
+Churn is an alternating up/down renewal process per device (exponential
+sojourns, mean ``mean_up_s`` / ``mean_down_s``), generated lazily along the
+virtual timeline and deterministic per (seed, device). Devices start up.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import math
+
+import numpy as np
+
+__all__ = ["DeviceModelConfig", "DeviceFleet"]
+
+_RATE_DISTS = ("uniform", "lognormal", "pareto", "two_class")
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceModelConfig:
+    base_step_time: float = 1.0      # seconds per local SGD step at rate 1.0
+    rate_dist: str = "uniform"
+    rate_sigma: float = 1.0          # lognormal sigma
+    pareto_alpha: float = 1.5        # pareto tail index (smaller = heavier)
+    slow_fraction: float = 0.0       # two_class: fraction of slow devices
+    slowdown: float = 5.0            # two_class: slow-device step-time factor
+    mean_up_s: float = math.inf      # churn: mean up sojourn (inf = no churn)
+    mean_down_s: float = 0.0         # churn: mean down sojourn
+    seed: int = 0
+
+    @property
+    def has_churn(self) -> bool:
+        return math.isfinite(self.mean_up_s) and self.mean_down_s > 0.0
+
+
+class DeviceFleet:
+    """n devices with fixed compute rates and lazily-generated churn traces."""
+
+    def __init__(self, n: int, cfg: DeviceModelConfig):
+        if cfg.rate_dist not in _RATE_DISTS:
+            raise ValueError(f"unknown rate_dist {cfg.rate_dist!r}; have {_RATE_DISTS}")
+        self.n = n
+        self.cfg = cfg
+        rng = np.random.default_rng([cfg.seed, 0])
+        if cfg.rate_dist == "uniform":
+            rates = np.ones(n)
+        elif cfg.rate_dist == "lognormal":
+            rates = np.exp(rng.normal(0.0, cfg.rate_sigma, size=n))
+        elif cfg.rate_dist == "pareto":
+            rates = 1.0 / (1.0 + rng.pareto(cfg.pareto_alpha, size=n))
+        else:  # two_class
+            rates = np.ones(n)
+            n_slow = int(round(n * cfg.slow_fraction))
+            if n_slow > 0:
+                slow = rng.choice(n, size=n_slow, replace=False)
+                rates[slow] = 1.0 / cfg.slowdown
+        self.rates = rates
+        # Churn traces: per device, sorted alternating boundary times
+        # [down0, up0, down1, up1, ...] (device is down on [down_i, up_i)),
+        # extended on demand to cover queried times.
+        self._bounds: list[list[float]] = [[] for _ in range(n)]
+        self._frontier = np.zeros(n)
+        self._churn_rngs = [np.random.default_rng([cfg.seed, 1, d]) for d in range(n)]
+
+    # ------------------------------------------------------------- compute
+    def step_time(self, device: int) -> float:
+        """Virtual seconds device ``device`` needs for one local SGD step."""
+        return self.cfg.base_step_time / float(self.rates[device])
+
+    # --------------------------------------------------------------- churn
+    def _extend(self, device: int, t: float) -> None:
+        """Grow the churn trace until it covers time ``t`` plus one interval."""
+        cfg = self.cfg
+        if not cfg.has_churn:
+            self._frontier[device] = math.inf
+            return
+        rng = self._churn_rngs[device]
+        bounds = self._bounds[device]
+        while self._frontier[device] <= t:
+            down = self._frontier[device] + rng.exponential(cfg.mean_up_s)
+            up = down + rng.exponential(cfg.mean_down_s)
+            bounds.extend((down, up))
+            self._frontier[device] = up
+
+    def is_up(self, device: int, t: float) -> bool:
+        self._extend(device, t)
+        # odd count of boundaries <= t means inside a [down, up) interval
+        return bisect.bisect_right(self._bounds[device], t) % 2 == 0
+
+    def avail_at(self, device: int, t: float) -> float:
+        """Earliest instant >= t at which the device is up (t itself if up)."""
+        self._extend(device, t)
+        i = bisect.bisect_right(self._bounds[device], t)
+        return t if i % 2 == 0 else self._bounds[device][i]
+
+    def down_during(self, device: int, t0: float, t1: float) -> float | None:
+        """First down transition inside [t0, t1), or None. Callers use this
+        to kill a local step in flight when its device churns out mid-step
+        (the paper's partial-update accounting keeps the chain's completed
+        prefix). bisect_right keeps the boundary convention of
+        ``is_up``/``avail_at``: at an up-boundary instant the device IS up
+        (a chain resuming exactly when its device returns must survive)."""
+        self._extend(device, t1)
+        bounds = self._bounds[device]
+        i = bisect.bisect_right(bounds, t0)
+        if i % 2 == 1:  # already down at t0
+            return t0
+        if i < len(bounds) and bounds[i] < t1:
+            return bounds[i]
+        return None

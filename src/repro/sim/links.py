@@ -1,0 +1,61 @@
+"""Link latency/bandwidth models pricing DFedRW payloads in virtual time.
+
+A walk hand-off (Eq. 13) or an aggregation message (Eq. 14) costs
+
+    latency_s + payload_bits / bandwidth_bps        (0 for a self-hop)
+
+seconds of virtual time, optionally scaled by a mean-one lognormal jitter.
+Payload bits come from the *segment wire format* of ``core/quantization``:
+the flat engine ships one Eq. 12 tensor per model-pytree leaf, so a b-bit
+payload costs ``sum_l (64 + b * d_l)`` bits and an fp32 one ``32 * d`` —
+quantization therefore shortens transfers by the same factor it saves in
+the Eq. 18 accounting, which is what makes QDFedRW *faster*, not just
+cheaper, under a wall-clock deadline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.flatten import FlatSpec
+from repro.core.quantization import wire_bits
+
+__all__ = ["LinkModelConfig", "LinkModel", "segment_wire_bits"]
+
+
+def segment_wire_bits(spec: FlatSpec, bits: int) -> int:
+    """Bits on the wire for ONE model-sized payload (hop hand-off or one
+    aggregation message): a per-leaf sequence of Eq. 12 segments, each with
+    its own 64-bit (s, ||w||) header; fp32 degenerates to 32*d."""
+    return sum(wire_bits(size, bits) for size in spec.sizes)
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkModelConfig:
+    latency_s: float = 0.0           # per-message fixed cost
+    bandwidth_bps: float = math.inf  # bits/second
+    jitter_sigma: float = 0.0        # lognormal sigma of a mean-one multiplier
+    seed: int = 0
+
+
+class LinkModel:
+    """Uniform (all-pairs) link model; self-transfers are free."""
+
+    def __init__(self, cfg: LinkModelConfig):
+        self.cfg = cfg
+        self._rng = np.random.default_rng([cfg.seed, 2])
+
+    def transfer_time(self, src: int, dst: int, payload_bits: float) -> float:
+        if src == dst:
+            return 0.0
+        cfg = self.cfg
+        t = cfg.latency_s
+        if math.isfinite(cfg.bandwidth_bps):
+            t += payload_bits / cfg.bandwidth_bps
+        if cfg.jitter_sigma > 0.0:
+            # mean-one multiplier: E[exp(N(-s^2/2, s))] = 1
+            t *= math.exp(self._rng.normal(-0.5 * cfg.jitter_sigma**2,
+                                           cfg.jitter_sigma))
+        return t

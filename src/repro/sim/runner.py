@@ -1,0 +1,302 @@
+"""Discrete-event asynchronous DFedRW: virtual wall-clock over the flat engine.
+
+The synchronous engine runs lockstep rounds; here a round is an *event
+timeline*. Each chain's walk unrolls as alternating events on the virtual
+clock — ``hop`` (the model arrives at a device, possibly waiting out a churn
+interval) and ``sgd`` (a local step completes after the device's
+rate-dependent step time, then pays the link model for the hand-off to the
+next device). The aggregation trigger is a wall-clock deadline, not a round
+barrier: when it fires, every chain contributes exactly the prefix of steps
+that *completed in virtual time* (Eq. 11/14 partial-update aggregation), and
+Eq. 18 comm accounting is charged for the hops that actually happened.
+
+Windowed batching into the flat engine
+--------------------------------------
+The event loop decides only *which* (chain, step) work items land inside the
+round's deadline window and *when*; the arithmetic is replayed through the
+synchronous flat engine's vmapped scan (core.dfedrw round_fn) in ONE jitted
+call per window. This is sound because chains are mutually independent
+between aggregation triggers — step k of chain m reads nothing but chain m's
+own state — so any execution order, in particular the batched step-major
+order of the scan, produces bit-identical results to event-order execution.
+Simulation therefore adds host-side bookkeeping, not per-event dispatch: the
+compiled round executable is the SAME one the synchronous engine uses
+(trace_count stays 1), and with uniform rates and no deadline the simulator
+reproduces the synchronous trajectory bit-exactly (tests/test_sim_engine.py).
+
+Straggler policies at the deadline:
+
+* ``"partial"`` — the paper: truncated chains aggregate their completed
+  prefix (their position device holds ``w^{t,last}`` of the prefix).
+* ``"drop"``    — the FedAvg-style baseline the paper criticizes: chains
+  that did not finish all K steps are discarded entirely, but their hops
+  still pay Eq. 18 comm (the work happened, then got thrown away).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time as _time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.core.dfedrw import DFedRW, DFedRWConfig, DFedRWState, RoundMetrics
+from repro.core.graph import Topology
+from repro.core.metrics import History
+from repro.core.walk import WalkPlan
+from repro.data.synthetic import FederatedDataset
+from repro.models.fnn import SmallModel
+from repro.sim.devices import DeviceFleet, DeviceModelConfig
+from repro.sim.events import Event, EventQueue
+from repro.sim.links import LinkModel, LinkModelConfig, segment_wire_bits
+
+__all__ = ["SimConfig", "SimRoundRecord", "SimResult", "AsyncDFedRW"]
+
+_POLICIES = ("partial", "drop")
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Wall-clock model wrapped around a DFedRWConfig."""
+
+    devices: DeviceModelConfig = dataclasses.field(default_factory=DeviceModelConfig)
+    links: LinkModelConfig = dataclasses.field(default_factory=LinkModelConfig)
+    deadline_s: float | None = None   # aggregation trigger period; None = the
+                                      # synchronous barrier (wait for all chains)
+    policy: str = "partial"           # "partial" | "drop" (see module docstring)
+
+
+@dataclasses.dataclass
+class SimRoundRecord:
+    """Host-side timeline bookkeeping of one simulated round."""
+
+    round: int
+    t_start: float
+    t_compute_end: float              # deadline (or barrier) instant
+    t_end: float                      # after aggregation messages land
+    events: int                       # events dispatched this round
+    host_loop_s: float                # wall time spent in the event loop
+    k_planned: np.ndarray             # (M,) sampled walk lengths
+    k_done: np.ndarray                # (M,) steps completed in virtual time
+    k_exec: np.ndarray                # (M,) steps actually aggregated (policy)
+    killed: np.ndarray                # (M,) bool: device churned out mid-step
+    agg_latency_s: float
+
+    @property
+    def truncated_chains(self) -> int:
+        return int((self.k_done < self.k_planned).sum())
+
+    @property
+    def dropped_chains(self) -> int:
+        return int(((self.k_exec == 0) & (self.k_planned > 0)).sum())
+
+
+@dataclasses.dataclass
+class SimResult:
+    history: History
+    records: list
+    state: Any
+    virtual_time_s: float = 0.0
+    events_total: int = 0
+    host_loop_s: float = 0.0
+
+    @property
+    def events_per_sec(self) -> float:
+        return self.events_total / max(self.host_loop_s, 1e-12)
+
+    def final(self) -> dict:
+        out = self.history.final()
+        out.update(virtual_time_s=self.virtual_time_s,
+                   events_total=self.events_total,
+                   events_per_sec=self.events_per_sec)
+        return out
+
+
+class AsyncDFedRW:
+    """Virtual-time asynchronous simulator over the flat DFedRW engine.
+
+    ``topology_schedule`` optionally makes the graph time-varying: a sorted
+    list of ``(t_from_s, Topology)`` entries; each round runs on the entry
+    active at its start instant (partition-then-heal scenarios). All entries
+    must keep the device count.
+    """
+
+    def __init__(
+        self,
+        model: SmallModel,
+        data: FederatedDataset,
+        topo: Topology,
+        cfg: DFedRWConfig,
+        sim: SimConfig,
+        topology_schedule: list[tuple[float, Topology]] | None = None,
+    ):
+        assert cfg.engine == "flat", "the simulator batches into the flat engine"
+        assert sim.policy in _POLICIES, sim.policy
+        self.engine = DFedRW(model, data, topo, cfg)
+        self.sim = sim
+        self.fleet = DeviceFleet(topo.n, sim.devices)
+        self.link = LinkModel(sim.links)
+        self.hop_bits = segment_wire_bits(self.engine.flat_spec, cfg.quant.bits)
+        self.queue = EventQueue()
+        self.t = 0.0
+        if topology_schedule is not None:
+            topology_schedule = sorted(topology_schedule, key=lambda e: e[0])
+            assert all(tp.n == topo.n for _, tp in topology_schedule)
+        self.topology_schedule = topology_schedule
+
+    # ----------------------------------------------------------- topology
+    def topo_at(self, t: float) -> Topology:
+        topo = self.engine.topo
+        if self.topology_schedule:
+            for t_from, entry in self.topology_schedule:
+                if t_from <= t:
+                    topo = entry
+        return topo
+
+    # ------------------------------------------------------------ timeline
+    def simulate_walk_timing(
+        self, plan: WalkPlan, t0: float, deadline: float = math.inf
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, int, float]:
+        """Run the round's hop/sgd event timeline (no compute).
+
+        Returns ``(k_done, timestamps, killed, events, host_loop_s)`` where
+        ``k_done[m]`` counts local steps chain m completed by ``deadline``,
+        ``timestamps[m, k]`` is step k's completion instant (NaN if never),
+        and ``killed[m]`` marks chains whose device churned out mid-step.
+        """
+        fleet, link, q = self.fleet, self.link, self.queue
+        m = plan.m
+        k_done = np.zeros(m, dtype=np.int32)
+        timestamps = np.full((m, plan.k_max), np.nan)
+        killed = np.zeros(m, dtype=bool)
+        q.clear(now=t0)
+        for mi in range(m):
+            if plan.k_m[mi] > 0:
+                q.push(t0, "hop", chain=mi, step=0)
+
+        def handle(ev: Event) -> None:
+            mi, k = ev.chain, ev.step
+            dev = int(plan.devices[mi, k])
+            if ev.kind == "hop":
+                up = fleet.avail_at(dev, ev.time)
+                if up > ev.time:          # wait out the down interval
+                    q.push(up, "hop", chain=mi, step=k)
+                    return
+                done_t = ev.time + fleet.step_time(dev)
+                if fleet.down_during(dev, ev.time, done_t) is not None:
+                    killed[mi] = True     # device lost mid-step: chain ends
+                    return                # with its completed prefix
+                q.push(done_t, "sgd", chain=mi, step=k)
+            else:  # "sgd": step k completed on dev at ev.time
+                k_done[mi] = k + 1
+                timestamps[mi, k] = ev.time
+                if k + 1 < plan.k_m[mi]:
+                    nxt = int(plan.devices[mi, k + 1])
+                    dt = link.transfer_time(dev, nxt, self.hop_bits)
+                    q.push(ev.time + dt, "hop", chain=mi, step=k + 1)
+
+        t_host = _time.perf_counter()
+        events = q.drain(handle, until=deadline)
+        host_loop_s = _time.perf_counter() - t_host
+        return k_done, timestamps, killed, events, host_loop_s
+
+    def _agg_latency(self, agg: tuple, n: int) -> float:
+        """Virtual time until the slowest Eq. 14 message lands (senders are
+        the neighbors each aggregator lists; self-rows are free)."""
+        agg_devices, agg_rows, agg_w = agg
+        worst = 0.0
+        for a, row, w in zip(agg_devices, agg_rows, agg_w):
+            if a >= n:
+                continue  # pad slot
+            for src, wi in zip(row, w):
+                if wi > 0.0 and src != a:
+                    worst = max(worst, self.link.transfer_time(
+                        int(src), int(a), self.hop_bits))
+        return worst
+
+    # ----------------------------------------------------------------- run
+    def init_state(self, key: jax.Array) -> DFedRWState:
+        return self.engine.init_state(key)
+
+    def run_round(
+        self, state: DFedRWState, key: jax.Array
+    ) -> tuple[DFedRWState, RoundMetrics, SimRoundRecord]:
+        sim = self.sim
+        t0 = self.t
+        topo = self.topo_at(t0)
+        plan, bidx = self.engine.plan_walks(state, topo=topo)
+        deadline = math.inf if sim.deadline_s is None else t0 + sim.deadline_s
+        k_done, ts, killed, events, loop_s = self.simulate_walk_timing(
+            plan, t0, deadline)
+        trunc = plan.truncated(k_done, timestamps=ts)
+        if sim.policy == "drop":
+            finished = (k_done >= plan.k_m) & ~killed
+            exec_plan = plan.truncated(np.where(finished, k_done, 0),
+                                       timestamps=ts)
+        else:
+            exec_plan = trunc
+        agg = self.engine.plan_aggregation(exec_plan, topo=topo)
+        if self.fleet.cfg.has_churn:
+            t_trigger = deadline if math.isfinite(deadline) else self.queue.now
+            agg = self._drop_down_aggregators(agg, t_trigger)
+        agg_lat = self._agg_latency(agg, topo.n)
+        t_compute_end = deadline if math.isfinite(deadline) else max(
+            self.queue.now, t0)
+        self.t = t_compute_end + agg_lat
+        new_state, metrics = self.engine.execute_round(
+            state, exec_plan, bidx, agg, key, account_plan=trunc)
+        record = SimRoundRecord(
+            round=new_state.round, t_start=t0, t_compute_end=t_compute_end,
+            t_end=self.t, events=events, host_loop_s=loop_s,
+            k_planned=plan.k_m.copy(), k_done=k_done, k_exec=exec_plan.k_m.copy(),
+            killed=killed, agg_latency_s=agg_lat)
+        return new_state, metrics, record
+
+    def _drop_down_aggregators(self, agg: tuple, t: float) -> tuple:
+        """An aggregator that is churned out when the trigger fires cannot
+        apply Eq. 11/14: redirect its device id out of range, so the jitted
+        scatter drops it; shapes are unchanged — no retrace. The offset
+        ``n + M`` clears the chain-mode pad ids (``n .. n+M``), keeping every
+        scatter index unique for the fast path."""
+        agg_devices, agg_rows, agg_w = agg
+        n = self.engine.topo.n
+        out = agg_devices.copy()
+        for i, a in enumerate(agg_devices):
+            if a < n and not self.fleet.is_up(int(a), t):
+                out[i] = n + self.engine.cfg.m_chains + a
+        return out, agg_rows, agg_w
+
+    def run(
+        self,
+        rounds: int,
+        key: jax.Array,
+        x_test: np.ndarray | None = None,
+        y_test: np.ndarray | None = None,
+        eval_every: int = 1,
+        callback: Callable | None = None,
+    ) -> SimResult:
+        """Drive ``rounds`` deadline windows; evaluates every ``eval_every``
+        rounds when test data is given (key handling matches
+        core.metrics.train_loop, so seeded runs are comparable)."""
+        state = self.init_state(key)
+        hist = History()
+        records: list[SimRoundRecord] = []
+        for r in range(rounds):
+            key, sub = jax.random.split(key)
+            state, metrics, record = self.run_round(state, sub)
+            records.append(record)
+            if x_test is not None and ((r + 1) % eval_every == 0 or r == rounds - 1):
+                evald = self.engine.evaluate(state, x_test, y_test)
+                hist.record(metrics, evald, state)
+                if callback is not None:
+                    callback(r, metrics, evald, record)
+        return SimResult(
+            history=hist,
+            records=records,
+            state=state,
+            virtual_time_s=self.t,
+            events_total=sum(rec.events for rec in records),
+            host_loop_s=sum(rec.host_loop_s for rec in records),
+        )

@@ -1,0 +1,247 @@
+"""Declarative scenario registry for the virtual-time DFedRW simulator.
+
+A scenario bundles everything one simulated experiment needs — model, data
+partition, topology (possibly time-varying), device/link wall-clock models,
+protocol config, deadline policy — behind a name, so launchers, benchmarks
+and tests run the *same* configurations:
+
+    setup = build_scenario("straggler_tail", n=20, seed=0, policy="drop")
+    result = setup.runner().run(setup.rounds, jax.random.PRNGKey(0),
+                                setup.x_test, setup.y_test)
+
+Every builder takes ``(n, seed)`` plus scenario-specific keyword overrides
+and returns a :class:`SimSetup`. Registered scenarios cover the regimes the
+DFL surveys call out as the gap between simulated and deployed systems:
+heavy-tailed stragglers under a deadline, statistical x system heterogeneity
+crosses, partition-then-heal topologies, and device churn mid-walk.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.dfedrw import DFedRWConfig
+from repro.core.graph import (
+    Topology,
+    lambda_p,
+    make_topology,
+    metropolis_hastings_matrix,
+    _with_self_loops,
+)
+from repro.core.heterogeneity import partition_dirichlet, partition_similarity
+from repro.core.quantization import QuantConfig
+from repro.data.synthetic import FederatedDataset, synthetic_image_classification
+from repro.models.fnn import make_fnn
+from repro.sim.devices import DeviceModelConfig
+from repro.sim.links import LinkModelConfig
+from repro.sim.runner import AsyncDFedRW, SimConfig
+
+__all__ = [
+    "SimSetup",
+    "SimScenario",
+    "SCENARIOS",
+    "register_scenario",
+    "get_scenario",
+    "list_scenarios",
+    "build_scenario",
+    "partitioned_topology",
+]
+
+
+@dataclasses.dataclass
+class SimSetup:
+    """One ready-to-run simulated experiment."""
+
+    name: str
+    model: Any
+    data: FederatedDataset
+    topo: Topology
+    cfg: DFedRWConfig
+    sim: SimConfig
+    x_test: np.ndarray
+    y_test: np.ndarray
+    rounds: int = 40
+    topology_schedule: list | None = None
+
+    def runner(self) -> AsyncDFedRW:
+        return AsyncDFedRW(self.model, self.data, self.topo, self.cfg,
+                           self.sim, topology_schedule=self.topology_schedule)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimScenario:
+    name: str
+    description: str
+    build: Callable[..., SimSetup]
+
+
+SCENARIOS: dict[str, SimScenario] = {}
+
+
+def register_scenario(name: str, description: str):
+    def deco(fn: Callable[..., SimSetup]):
+        SCENARIOS[name] = SimScenario(name=name, description=description, build=fn)
+        return fn
+    return deco
+
+
+def get_scenario(name: str) -> SimScenario:
+    if name not in SCENARIOS:
+        raise ValueError(f"unknown scenario {name!r}; have {sorted(SCENARIOS)}")
+    return SCENARIOS[name]
+
+
+def list_scenarios() -> dict[str, str]:
+    return {s.name: s.description for s in SCENARIOS.values()}
+
+
+def build_scenario(name: str, n: int = 20, seed: int = 0, **overrides) -> SimSetup:
+    return get_scenario(name).build(n=n, seed=seed, **overrides)
+
+
+# ------------------------------------------------------------------ helpers
+
+
+def _image_setup(n: int, seed: int, scheme: str = "similarity",
+                 alpha: float = 0.1, u: int = 50):
+    """The paper's §VI-A synthetic image task, partitioned for n devices."""
+    x, y = synthetic_image_classification(n_samples=4000, seed=0, noise=2.0)
+    xt, yt = synthetic_image_classification(n_samples=1000, seed=1, noise=2.0)
+    rng = np.random.default_rng(seed + 7)
+    if scheme == "dirichlet":
+        part = partition_dirichlet(y, n, alpha, rng)
+    else:
+        part = partition_similarity(y, n, u, rng)
+    return FederatedDataset.from_partition(x, y, part), xt, yt
+
+
+def partitioned_topology(n: int, n_parts: int = 2) -> Topology:
+    """``n_parts`` disconnected ring components (a network partition): the
+    MH walk cannot leave its component and lambda_P = 1 — the regime the
+    connected-ER resampling in core.graph refuses to hand out silently, here
+    constructed on purpose."""
+    adj = np.zeros((n, n), dtype=bool)
+    bounds = np.linspace(0, n, n_parts + 1).astype(int)
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        size = hi - lo
+        idx = lo + np.arange(size)
+        adj[idx, lo + (idx - lo + 1) % size] = True
+    adj = _with_self_loops(adj)
+    P = metropolis_hastings_matrix(adj)
+    return Topology(name=f"partitioned{n_parts}", adjacency=adj, transition=P,
+                    lambda_p=lambda_p(P), n=n)
+
+
+# ---------------------------------------------------------------- scenarios
+
+
+@register_scenario(
+    "uniform_sync",
+    "uniform rates, free links, no deadline: reproduces the synchronous "
+    "flat engine bit-exactly (the parity anchor)")
+def _uniform_sync(n: int = 20, seed: int = 0, bits: int = 32,
+                  rounds: int = 40, **kw) -> SimSetup:
+    data, xt, yt = _image_setup(n, seed)
+    cfg = DFedRWConfig(m_chains=5, k_walk=5, quant=QuantConfig(bits=bits),
+                       seed=seed)
+    sim = SimConfig(devices=DeviceModelConfig(rate_dist="uniform", seed=seed),
+                    links=LinkModelConfig(), deadline_s=None, **kw)
+    return SimSetup(name="uniform_sync", model=make_fnn((100,)), data=data,
+                    topo=make_topology("complete", n), cfg=cfg, sim=sim,
+                    x_test=xt, y_test=yt, rounds=rounds)
+
+
+@register_scenario(
+    "straggler_tail",
+    "lognormal heavy-tailed device rates under a wall-clock aggregation "
+    "deadline; policy='partial' aggregates truncated walks (the paper), "
+    "policy='drop' discards them (the baseline)")
+def _straggler_tail(n: int = 20, seed: int = 0, policy: str = "partial",
+                    rate_sigma: float = 1.25, deadline_factor: float = 1.0,
+                    bits: int = 32, rounds: int = 40, **kw) -> SimSetup:
+    data, xt, yt = _image_setup(n, seed)
+    cfg = DFedRWConfig(m_chains=5, k_walk=5, quant=QuantConfig(bits=bits),
+                       seed=seed)
+    dev = DeviceModelConfig(rate_dist="lognormal", rate_sigma=rate_sigma,
+                            base_step_time=1.0, seed=seed)
+    # deadline_factor=1.0 gives a median-rate chain exactly enough wall
+    # clock for its K steps: chains routed through the slow tail truncate.
+    sim = SimConfig(devices=dev,
+                    links=LinkModelConfig(latency_s=0.05, bandwidth_bps=1e9),
+                    deadline_s=deadline_factor * cfg.k_walk * dev.base_step_time,
+                    policy=policy, **kw)
+    return SimSetup(name="straggler_tail", model=make_fnn((100,)), data=data,
+                    topo=make_topology("complete", n), cfg=cfg, sim=sim,
+                    x_test=xt, y_test=yt, rounds=rounds)
+
+
+@register_scenario(
+    "dirichlet_deadline",
+    "statistical x system heterogeneity cross: Dirichlet(alpha) non-IID "
+    "partition under the heavy-tailed deadline of straggler_tail")
+def _dirichlet_deadline(n: int = 20, seed: int = 0, policy: str = "partial",
+                        alpha: float = 0.1, rate_sigma: float = 1.25,
+                        deadline_factor: float = 1.0, bits: int = 32,
+                        rounds: int = 40, **kw) -> SimSetup:
+    data, xt, yt = _image_setup(n, seed, scheme="dirichlet", alpha=alpha)
+    cfg = DFedRWConfig(m_chains=5, k_walk=5, quant=QuantConfig(bits=bits),
+                       seed=seed)
+    dev = DeviceModelConfig(rate_dist="lognormal", rate_sigma=rate_sigma,
+                            base_step_time=1.0, seed=seed)
+    sim = SimConfig(devices=dev,
+                    links=LinkModelConfig(latency_s=0.05, bandwidth_bps=1e9),
+                    deadline_s=deadline_factor * cfg.k_walk * dev.base_step_time,
+                    policy=policy, **kw)
+    return SimSetup(name="dirichlet_deadline", model=make_fnn((100,)),
+                    data=data, topo=make_topology("complete", n), cfg=cfg,
+                    sim=sim, x_test=xt, y_test=yt, rounds=rounds)
+
+
+@register_scenario(
+    "partition_heal",
+    "time-varying topology: the network starts split into two disconnected "
+    "components (walks cannot mix, lambda_P = 1), then heals into one ring "
+    "mid-run")
+def _partition_heal(n: int = 20, seed: int = 0, heal_after_rounds: int = 10,
+                    rounds: int = 30, bits: int = 32, **kw) -> SimSetup:
+    data, xt, yt = _image_setup(n, seed)
+    cfg = DFedRWConfig(m_chains=5, k_walk=5, quant=QuantConfig(bits=bits),
+                       seed=seed)
+    dev = DeviceModelConfig(rate_dist="uniform", base_step_time=1.0, seed=seed)
+    links = LinkModelConfig(latency_s=0.05, bandwidth_bps=1e9)
+    # Uniform rates + barrier rounds take ~K*(step + hop latency) virtual
+    # seconds each; schedule the heal at that estimate x heal_after_rounds.
+    t_heal = heal_after_rounds * cfg.k_walk * (dev.base_step_time + 2 * links.latency_s)
+    schedule = [(0.0, partitioned_topology(n, 2)),
+                (t_heal, make_topology("ring", n))]
+    sim = SimConfig(devices=dev, links=links, deadline_s=None, **kw)
+    return SimSetup(name="partition_heal", model=make_fnn((100,)), data=data,
+                    topo=partitioned_topology(n, 2), cfg=cfg, sim=sim,
+                    x_test=xt, y_test=yt, rounds=rounds,
+                    topology_schedule=schedule)
+
+
+@register_scenario(
+    "churn_dropout",
+    "device availability churn: devices go offline for whole intervals, "
+    "killing walks mid-step (partial-update accounting keeps the completed "
+    "prefix) and knocking out aggregators")
+def _churn_dropout(n: int = 20, seed: int = 0, policy: str = "partial",
+                   mean_up_s: float = 12.0, mean_down_s: float = 4.0,
+                   deadline_factor: float = 1.6, bits: int = 32,
+                   rounds: int = 40, **kw) -> SimSetup:
+    data, xt, yt = _image_setup(n, seed)
+    cfg = DFedRWConfig(m_chains=5, k_walk=5, quant=QuantConfig(bits=bits),
+                       seed=seed)
+    dev = DeviceModelConfig(rate_dist="uniform", base_step_time=1.0,
+                            mean_up_s=mean_up_s, mean_down_s=mean_down_s,
+                            seed=seed)
+    sim = SimConfig(devices=dev,
+                    links=LinkModelConfig(latency_s=0.05, bandwidth_bps=1e9),
+                    deadline_s=deadline_factor * cfg.k_walk * dev.base_step_time,
+                    policy=policy, **kw)
+    return SimSetup(name="churn_dropout", model=make_fnn((100,)), data=data,
+                    topo=make_topology("complete", n), cfg=cfg, sim=sim,
+                    x_test=xt, y_test=yt, rounds=rounds)

@@ -78,3 +78,41 @@ def test_mh_rows_stochastic_random_graphs(n, seed):
     P = metropolis_hastings_matrix(adj)
     np.testing.assert_allclose(P.sum(axis=1), 1.0, atol=1e-12)
     assert abs(lambda_p(P)) < 1.0 + 1e-12
+
+
+@given(n=st.integers(3, 40), p=st.floats(0.25, 0.9), seed=st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_erdos_renyi_connected_and_mixing(n, p, seed):
+    """Property: every ER draw handed out is connected — so lambda_P < 1
+    strictly and the MH walk mixes. (A disconnected graph has a second
+    unit-magnitude eigenvalue, making lambda_P = 1 and Lemma 2 vacuous;
+    erdos_renyi_graph resamples such draws away.)"""
+    from repro.core.graph import erdos_renyi_graph, is_connected
+
+    adj = erdos_renyi_graph(n, p, seed=seed)
+    assert is_connected(adj)
+    assert lambda_p(metropolis_hastings_matrix(adj)) < 1.0 - 1e-9
+    # deterministic given (n, p, seed)
+    np.testing.assert_array_equal(adj, erdos_renyi_graph(n, p, seed=seed))
+
+
+def test_erdos_renyi_rejects_hopeless_p():
+    """p = 0 can never connect: the resampler must refuse rather than loop
+    or silently graft edges on."""
+    from repro.core.graph import erdos_renyi_graph
+
+    with pytest.raises(ValueError, match="connect"):
+        erdos_renyi_graph(12, 0.0, max_tries=10)
+
+
+def test_is_connected_detects_components():
+    from repro.core.graph import is_connected
+
+    adj = np.zeros((4, 4), dtype=bool)
+    adj[0, 1] = adj[1, 0] = True
+    adj[2, 3] = adj[3, 2] = True
+    np.fill_diagonal(adj, True)
+    assert not is_connected(adj)
+    adj[1, 2] = adj[2, 1] = True
+    assert is_connected(adj)
+    assert is_connected(np.ones((1, 1), dtype=bool))

@@ -1,0 +1,320 @@
+"""Virtual-time simulator: zero-latency/no-deadline parity with the
+synchronous flat engine (bit-exact), deadline truncation and drop-policy
+semantics, churn dropout mid-walk, link payload pricing, the event queue,
+and the scenario registry."""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import DFedRW, DFedRWConfig, QuantConfig, make_topology
+from repro.core.heterogeneity import partition_similarity
+from repro.data import FederatedDataset, synthetic_image_classification
+from repro.models import make_fnn
+from repro.sim import (
+    AsyncDFedRW,
+    DeviceFleet,
+    DeviceModelConfig,
+    EventQueue,
+    LinkModel,
+    LinkModelConfig,
+    SimConfig,
+    build_scenario,
+    list_scenarios,
+    partitioned_topology,
+    segment_wire_bits,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    x, y = synthetic_image_classification(n_samples=1500, seed=0, noise=1.0)
+    part = partition_similarity(y, 8, 50, np.random.default_rng(0))
+    data = FederatedDataset.from_partition(x, y, part)
+    topo = make_topology("complete", 8)
+    model = make_fnn((64,))
+    return data, topo, model
+
+
+# ------------------------------------------------------------------ parity
+
+
+@pytest.mark.parametrize("bits", [32, 8])
+def test_parity_no_deadline_bit_exact(setup, bits):
+    """Acceptance: uniform device rates + no deadline reproduce the
+    synchronous flat engine's trajectory BIT-exactly (same seeds, same
+    round keys — the simulator replays the identical jitted round), at fp32
+    and under 8-bit stochastic quantization (same qkey => same kernel RNG).
+    """
+    data, topo, model = setup
+    cfg = DFedRWConfig(m_chains=4, k_walk=3, batch_size=32,
+                       quant=QuantConfig(bits=bits), seed=5)
+    sync = DFedRW(model, data, topo, cfg)
+    sim = AsyncDFedRW(model, data, topo, cfg, SimConfig())
+    key = jax.random.PRNGKey(0)
+    ss, sa = sync.init_state(key), sim.init_state(key)
+    ks = ka = key
+    for _ in range(3):
+        ks, sub_s = jax.random.split(ks)
+        ka, sub_a = jax.random.split(ka)
+        ss, ms = sync.run_round(ss, sub_s)
+        sa, ma, rec = sim.run_round(sa, sub_a)
+        np.testing.assert_array_equal(np.asarray(ss.device_params),
+                                      np.asarray(sa.device_params))
+        assert ms.train_loss == ma.train_loss
+        assert ms.comm_bits_round == ma.comm_bits_round
+        assert ms.comm_bits_busiest_round == ma.comm_bits_busiest_round
+        assert ms.gamma_hat == ma.gamma_hat
+        # no deadline: every planned step completed, none dropped
+        np.testing.assert_array_equal(rec.k_done, rec.k_planned)
+        np.testing.assert_array_equal(rec.k_exec, rec.k_planned)
+        assert not rec.killed.any()
+    # the simulator reuses ONE compiled round executable, like the engine
+    assert sync.trace_count == 1 and sim.engine.trace_count == 1
+
+
+def test_parity_virtual_time_advances(setup):
+    """Even the parity configuration lives on a real clock: each barrier
+    round costs exactly K uniform-rate steps of virtual time (free links)."""
+    data, topo, model = setup
+    cfg = DFedRWConfig(m_chains=3, k_walk=4, batch_size=32, seed=1)
+    sim = AsyncDFedRW(model, data, topo, cfg, SimConfig())
+    state = sim.init_state(jax.random.PRNGKey(0))
+    state, _, rec = sim.run_round(state, jax.random.PRNGKey(1))
+    assert rec.t_end == pytest.approx(4.0)  # K * base_step_time
+    ts = rec.k_done  # all chains completed
+    assert (ts == 4).all()
+
+
+# ---------------------------------------------------------------- deadline
+
+
+def _two_class_sim(data, topo, model, policy, deadline_factor=1.0):
+    cfg = DFedRWConfig(m_chains=4, k_walk=4, batch_size=32, seed=2)
+    dev = DeviceModelConfig(rate_dist="two_class", slow_fraction=0.5,
+                            slowdown=4.0, seed=3)
+    sim = SimConfig(devices=dev, links=LinkModelConfig(),
+                    deadline_s=deadline_factor * cfg.k_walk, policy=policy)
+    return AsyncDFedRW(model, data, topo, cfg, sim)
+
+
+def test_deadline_truncates_slow_chains(setup):
+    """With 50% of devices 4x slow and the deadline at K fast-steps, chains
+    routed through slow devices complete fewer steps; the executed mask
+    matches k_done exactly and Eq. 18 charges only realized hops."""
+    data, topo, model = setup
+    sim = _two_class_sim(data, topo, model, "partial")
+    state = sim.init_state(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(0)
+    saw_truncation = False
+    for _ in range(4):
+        key, sub = jax.random.split(key)
+        state, metrics, rec = sim.run_round(state, sub)
+        assert (rec.k_done <= rec.k_planned).all()
+        np.testing.assert_array_equal(rec.k_exec, rec.k_done)  # partial policy
+        saw_truncation |= bool((rec.k_done < rec.k_planned).any())
+        # slow devices take 4 virtual seconds per step: a chain that spent
+        # every step on slow devices can complete at most deadline/4 steps
+        assert rec.k_done.max() <= 4
+    assert saw_truncation
+
+
+def test_drop_policy_discards_unfinished_chains(setup):
+    """policy='drop': a chain either finished all K steps or contributes
+    nothing (k_exec == 0) — and the dropped chains still pay comm (the
+    account_plan covers their realized hops), so drop is never cheaper per
+    round than partial at equal timing."""
+    data, topo, model = setup
+    simp = _two_class_sim(data, topo, model, "partial")
+    simd = _two_class_sim(data, topo, model, "drop")
+    kp = kd = jax.random.PRNGKey(0)
+    sp, sd = simp.init_state(kp), simd.init_state(kd)
+    for _ in range(3):
+        kp, sub_p = jax.random.split(kp)
+        kd, sub_d = jax.random.split(kd)
+        sp, mp, rp = simp.run_round(sp, sub_p)
+        sd, md, rd = simd.run_round(sd, sub_d)
+        full = rd.k_exec == rd.k_planned
+        assert ((rd.k_exec == 0) | full).all()
+        if (rd.k_done < rd.k_planned).any():
+            assert rd.dropped_chains > 0
+    # identical protocol seeds => identical first-round walk timing
+    np.testing.assert_array_equal(simp.fleet.rates, simd.fleet.rates)
+
+
+def test_quantized_payload_shortens_hops(setup):
+    """QDFedRW under bandwidth-limited links: the 8-bit segment payload is
+    ~4x smaller on the wire, so the same walk finishes sooner in virtual
+    time (quantization buys wall clock, not just Eq. 18 bits)."""
+    data, topo, model = setup
+    times = {}
+    for bits in (32, 8):
+        cfg = DFedRWConfig(m_chains=3, k_walk=3, batch_size=32,
+                           quant=QuantConfig(bits=bits), seed=4)
+        sim = AsyncDFedRW(model, data, topo, cfg, SimConfig(
+            links=LinkModelConfig(latency_s=0.0, bandwidth_bps=1e6)))
+        state = sim.init_state(jax.random.PRNGKey(0))
+        _, _, rec = sim.run_round(state, jax.random.PRNGKey(1))
+        times[bits] = rec.t_end
+    assert times[8] < times[32]
+    spec_bits32 = segment_wire_bits(
+        AsyncDFedRW(model, data, topo,
+                    DFedRWConfig(quant=QuantConfig(bits=32)),
+                    SimConfig()).engine.flat_spec, 32)
+    assert times[32] - times[8] > 0.1 * spec_bits32 / 1e6  # real savings
+
+
+# ------------------------------------------------------------------- churn
+
+
+def test_churn_kills_chains_mid_walk(setup):
+    """Aggressive availability churn kills some walks mid-step; killed
+    chains keep their completed prefix (partial-update accounting) and the
+    round still executes."""
+    data, topo, model = setup
+    cfg = DFedRWConfig(m_chains=4, k_walk=4, batch_size=32, seed=6)
+    dev = DeviceModelConfig(mean_up_s=3.0, mean_down_s=5.0, seed=7)
+    sim = AsyncDFedRW(model, data, topo, cfg,
+                      SimConfig(devices=dev, deadline_s=8.0))
+    state = sim.init_state(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(0)
+    killed_total = 0
+    for _ in range(4):
+        key, sub = jax.random.split(key)
+        state, _, rec = sim.run_round(state, sub)
+        killed_total += int(rec.killed.sum())
+        assert (rec.k_exec[rec.killed] <= rec.k_planned[rec.killed]).all()
+    assert killed_total > 0
+    assert sim.engine.trace_count == 1  # churn never changes compiled shapes
+
+
+def test_fleet_churn_trace_queries():
+    fleet = DeviceFleet(2, DeviceModelConfig(mean_up_s=5.0, mean_down_s=2.0,
+                                             seed=0))
+    # deterministic trace: queries agree with each other
+    for t in np.linspace(0.0, 100.0, 41):
+        up = fleet.is_up(0, t)
+        assert fleet.avail_at(0, t) == t if up else fleet.avail_at(0, t) > t
+        if up:
+            assert fleet.down_during(0, t, t + 1e-9) is None
+    # boundary convention: at the instant a device comes back up it IS up,
+    # and a step started exactly then must not be insta-killed (a chain
+    # that waits out a down interval resumes at precisely this instant)
+    t, seen = 0.0, 0
+    while seen < 5:
+        down = fleet.down_during(0, t, 1e9)
+        if down is None:
+            break
+        up = fleet.avail_at(0, down)
+        assert up > down and fleet.is_up(0, up)
+        nxt = fleet.down_during(0, up, 1e9)
+        assert nxt is None or nxt > up
+        t, seen = up, seen + 1
+    assert seen > 0
+    # no churn: always up
+    fleet2 = DeviceFleet(1, DeviceModelConfig())
+    assert fleet2.is_up(0, 1e9) and fleet2.avail_at(0, 5.0) == 5.0
+    assert fleet2.down_during(0, 0.0, 1e9) is None
+
+
+def test_chain_mode_dead_chains_excluded_from_aggregation(setup):
+    """A chain truncated to ZERO steps (deadline/churn/drop — never produced
+    by the synchronous planner) holds stale params at its start device: the
+    §VI-F chain-mode aggregation must neither appoint it aggregator nor give
+    it weight, while live-chain weights renormalize to 1."""
+    import dataclasses
+
+    data, topo, model = setup
+    cfg = DFedRWConfig(m_chains=3, k_walk=3, batch_size=32, chain_mode=True,
+                       seed=8)
+    engine = DFedRW(model, data, topo, cfg)
+    state = engine.init_state(jax.random.PRNGKey(0))
+    plan, _ = engine.plan_walks(state)
+    dead = plan.truncated(np.array([plan.k_m[0], 0, plan.k_m[2]]))
+    agg_devices, agg_rows, agg_w = engine.plan_aggregation(dead)
+    live_ends = set(dead.last_device[[0, 2]].tolist())
+    assert set(agg_devices[agg_devices < topo.n].tolist()) == live_ends
+    assert (agg_w[:, 1] == 0.0).all()          # dead chain: zero weight
+    real = agg_devices < topo.n
+    np.testing.assert_allclose(agg_w[real].sum(axis=1), 1.0)  # renormalized
+    # all-dead round degenerates to pure padding (scatter drops everything)
+    all_dead = plan.truncated(np.zeros(3, dtype=int))
+    agg_devices, _, agg_w = engine.plan_aggregation(all_dead)
+    assert (agg_devices >= topo.n).all() and (agg_w == 0.0).all()
+
+
+# --------------------------------------------------------------- primitives
+
+
+def test_event_queue_ordering_and_horizon():
+    q = EventQueue()
+    q.push(2.0, "b")
+    q.push(1.0, "a")
+    q.push(2.0, "c")  # same instant as "b": FIFO by seq
+    seen = []
+    n = q.drain(lambda ev: seen.append(ev.kind), until=2.0)
+    assert n == 3 and seen == ["a", "b", "c"]
+    q.push(5.0, "later")
+    assert q.drain(lambda ev: None, until=4.0) == 0 and len(q) == 1
+    with pytest.raises(ValueError):
+        q.push(1.0, "past")  # clock is at 2.0
+
+
+def test_link_pricing_wire_format(setup):
+    data, topo, model = setup
+    spec = DFedRW(model, data, topo, DFedRWConfig()).flat_spec
+    # segment wire format: sum_l (64 + b*d_l) quantized, 32*d at fp32
+    assert segment_wire_bits(spec, 32) == 32 * spec.d
+    assert segment_wire_bits(spec, 8) == sum(
+        64 + 8 * s for s in spec.sizes)
+    link = LinkModel(LinkModelConfig(latency_s=0.5, bandwidth_bps=100.0))
+    assert link.transfer_time(0, 0, 1e9) == 0.0           # self-hop is free
+    assert link.transfer_time(0, 1, 200.0) == pytest.approx(2.5)
+    free = LinkModel(LinkModelConfig())
+    assert free.transfer_time(0, 1, 1e12) == 0.0
+
+
+# ---------------------------------------------------------------- scenarios
+
+
+def test_scenario_registry_complete():
+    names = set(list_scenarios())
+    assert {"uniform_sync", "straggler_tail", "dirichlet_deadline",
+            "partition_heal", "churn_dropout"} <= names
+    with pytest.raises(ValueError):
+        build_scenario("no_such_scenario")
+
+
+@pytest.mark.slow
+def test_scenario_smoke_runs():
+    """Every registered scenario builds and survives two rounds."""
+    for name in list_scenarios():
+        setup = build_scenario(name, n=10, seed=0)
+        result = setup.runner().run(2, jax.random.PRNGKey(0),
+                                    setup.x_test, setup.y_test, eval_every=2)
+        assert len(result.records) == 2
+        assert result.virtual_time_s > 0.0
+        assert math.isfinite(result.history.test_accuracy[-1])
+
+
+def test_partitioned_topology_blocks_walks(setup):
+    """Pre-heal, walks never cross the partition; the healed schedule entry
+    takes over once virtual time passes t_heal."""
+    topo_split = partitioned_topology(12, 2)
+    assert topo_split.lambda_p == pytest.approx(1.0)  # disconnected: no mixing
+    x, y = synthetic_image_classification(n_samples=800, seed=0, noise=1.0)
+    part = partition_similarity(y, 12, 50, np.random.default_rng(0))
+    data = FederatedDataset.from_partition(x, y, part)
+    model = make_fnn((32,))
+    cfg = DFedRWConfig(m_chains=6, k_walk=6, batch_size=16, seed=0)
+    healed = make_topology("ring", 12)
+    sim = AsyncDFedRW(model, data, topo_split, cfg, SimConfig(),
+                      topology_schedule=[(0.0, topo_split), (100.0, healed)])
+    state = sim.init_state(jax.random.PRNGKey(0))
+    plan, _ = sim.engine.plan_walks(state, topo=sim.topo_at(0.0))
+    half = plan.devices < 6
+    # each chain stays inside its starting component
+    assert (half.all(axis=1) | (~half).all(axis=1)).all()
+    assert sim.topo_at(99.9) is topo_split
+    assert sim.topo_at(100.0) is healed

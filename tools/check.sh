@@ -16,6 +16,10 @@
 #                             devices, so the sharded decode/prefill
 #                             programs (cache/slot sharding over the mesh)
 #                             are exercised for real, not just on 1 device.
+#   tools/check.sh --sim      sim lane: the virtual-time simulator (engine
+#                             parity, deadline/churn semantics, scenario
+#                             registry incl. the slow scenario smoke) plus
+#                             its walk/graph substrate.
 #
 # Extra args are forwarded to pytest in all lanes.
 set -euo pipefail
@@ -29,6 +33,10 @@ elif [[ "${1:-}" == "--serve" ]]; then
   XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
     tests/test_serve_engine.py tests/test_decode_consistency.py "$@"
+elif [[ "${1:-}" == "--sim" ]]; then
+  shift
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
+    tests/test_sim_engine.py tests/test_walk.py tests/test_graph.py "$@"
 else
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m "not slow" "$@"
 fi
