@@ -1,51 +1,93 @@
-"""Virtual-time asynchronous DFedRW: partial updates vs dropping stragglers.
+"""Fully-async DFedRW: overlapping rounds vs truncating vs dropping chains.
 
-Runs the `straggler_tail` scenario (lognormal heavy-tailed device rates
-under a wall-clock aggregation deadline) twice at identical protocol seeds
-and timing draws — once aggregating each chain's completed prefix (the
-paper's Eq. 11/14 partial updates) and once discarding unfinished chains
-(the FedAvg-style baseline) — then a churn run where devices drop offline
-mid-walk. Prints per-eval accuracy with the virtual-time column.
+Runs the `overlap_async` scenario (lognormal heavy-tailed device rates with
+the aggregation deadline at HALF a median chain's walk, so nearly every
+chain is cut mid-flight) three times at identical protocol seeds and timing
+draws:
+
+* ``policy="overlap"`` — the fully-asynchronous mode: a cut chain
+  aggregates its completed prefix AND keeps walking across windows (the
+  persistent event queue carries its in-flight step/transfer; the next
+  window re-anchors it on the device holding its model);
+* ``policy="partial"`` — the lockstep paper baseline: the prefix
+  aggregates, the rest of the walk is truncated away;
+* ``policy="drop"``   — the FedAvg-style baseline: unfinished chains are
+  discarded entirely (but still pay Eq. 18 for their hops).
+
+The overlap run is captured with ``record=True`` and saved as a versioned
+JSONL event trace, then replayed through the flat engine (zero event
+simulation) to demonstrate the bit-exact replay contract — the same
+mechanism that lets a recorded timeline drive the pod-scale gossip
+deployment as an integration fixture. See docs/SIMULATOR.md.
 
 Usage:  PYTHONPATH=src python examples/async_straggler_sim.py
 """
-import jax
+import os
+import tempfile
 
-from repro.sim import build_scenario
+import jax
+import numpy as np
+
+from repro.sim import SimTrace, build_scenario
 
 N, SEED, ROUNDS = 20, 0, 24
+TRACE_PATH = os.path.join(tempfile.gettempdir(),
+                          "async_straggler_trace.jsonl")
 
 
-def run(name: str, **overrides):
+def run(name: str, record: bool = False, **overrides):
     setup = build_scenario(name, n=N, seed=SEED, rounds=ROUNDS, **overrides)
     runner = setup.runner()
     label = f"{name}/{setup.sim.policy}"
     print(f"\n== {label}: deadline={setup.sim.deadline_s}s "
           f"bits={setup.cfg.quant.bits}")
 
-    def cb(r, metrics, evald, record):
-        print(f"  round {record.round:3d}  t={record.t_end:7.1f}s  "
+    def cb(r, metrics, evald, rec):
+        print(f"  round {rec.round:3d}  t={rec.t_end:7.1f}s  "
               f"acc={evald['accuracy']:.3f}  "
-              f"truncated={record.truncated_chains} "
-              f"dropped={record.dropped_chains} "
-              f"killed={int(record.killed.sum())}")
+              f"truncated={rec.truncated_chains} "
+              f"resumed={rec.resumed_chains} "
+              f"dropped={rec.dropped_chains} "
+              f"killed={int(rec.killed.sum())}")
 
     result = runner.run(setup.rounds, jax.random.PRNGKey(SEED),
-                        setup.x_test, setup.y_test, eval_every=6, callback=cb)
+                        setup.x_test, setup.y_test, eval_every=6,
+                        callback=cb, record=record)
     final = result.final()
+    finished = int(sum((r.k_done == r.k_planned).sum() for r in result.records))
     print(f"  final acc={final['accuracy']:.3f} "
           f"virtual_time={final['virtual_time_s']:.0f}s "
-          f"events={final['events_total']}")
-    return final
+          f"events={final['events_total']} full_walks={finished}")
+    return result, setup
 
 
 def main() -> None:
-    partial = run("straggler_tail", policy="partial")
-    drop = run("straggler_tail", policy="drop")
-    print(f"\npartial-update aggregation beats drop-stragglers by "
-          f"{partial['accuracy'] - drop['accuracy']:+.3f} accuracy "
-          f"at the same virtual deadline budget")
-    run("churn_dropout")
+    overlap, setup = run("overlap_async", policy="overlap", record=True)
+    partial, _ = run("overlap_async", policy="partial")
+    drop, _ = run("overlap_async", policy="drop")
+
+    a_o, a_p, a_d = (r.final()["accuracy"] for r in (overlap, partial, drop))
+    print(f"\noverlapping rounds vs truncate: {a_o - a_p:+.3f} accuracy; "
+          f"vs drop: {a_o - a_d:+.3f} — at the same deadline budget, "
+          f"resumed chains lose no walk tails")
+
+    # --- recorded trace: save, reload, replay bit-exactly -----------------
+    overlap.trace.header.update(scenario=setup.name, build_seed=SEED,
+                                key_seed=SEED, eval_every=6,
+                                build_overrides={"policy": "overlap",
+                                                 "rounds": ROUNDS})
+    overlap.trace.save(TRACE_PATH)
+    replayed = build_scenario("overlap_async", n=N, seed=SEED, rounds=ROUNDS,
+                              policy="overlap").runner().replay(
+        SimTrace.load(TRACE_PATH), jax.random.PRNGKey(SEED),
+        setup.x_test, setup.y_test, eval_every=6)
+    assert np.array_equal(np.asarray(overlap.state.device_params),
+                          np.asarray(replayed.state.device_params))
+    assert replayed.history.test_accuracy == overlap.history.test_accuracy
+    print(f"\nrecorded {len(overlap.trace.windows)} windows -> {TRACE_PATH} "
+          f"(schema v{overlap.trace.header['version']}); replayed "
+          f"bit-identically through the flat engine. CLI equivalent:\n"
+          f"  python -m repro.launch.sim --replay {TRACE_PATH}")
 
 
 if __name__ == "__main__":

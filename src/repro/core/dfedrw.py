@@ -116,15 +116,22 @@ def _stack_params(params: Any, n: int) -> Any:
 def gamma_hat_from_traj(grad_sq_traj: jax.Array, walk_mask: jax.Array) -> jax.Array:
     """Lemma-1 estimate ||g_last|| / ||g_first|| averaged over chains.
 
+    Mask-general: the first/last *active* step of each chain brackets the
+    ratio, so the non-prefix window masks of the asynchronous simulator (a
+    resumed chain's leading column is a masked anchor re-gather, repro.sim)
+    measure the executed slice only. For the synchronous planner's prefix
+    masks this reduces exactly to steps 0 and K_m-1.
+
     Chains whose walk mask is entirely False performed no step this round;
     their g_last/g0 ratio is computed from pre-masking gradients and is pure
     noise, so they are excluded from the mean (a fully-masked chain can arise
     under custom straggler models even though `chain_lengths` floors K_m at 1).
     """
-    m = walk_mask.shape[0]
+    m, k = walk_mask.shape
     active_steps = jnp.sum(walk_mask, axis=1)                      # (M,)
-    g0 = jnp.sqrt(grad_sq_traj[0] + 1e-12)
-    k_last = jnp.maximum(active_steps - 1, 0)
+    k_first = jnp.argmax(walk_mask, axis=1)                        # 0 if none
+    k_last = k - 1 - jnp.argmax(walk_mask[:, ::-1], axis=1)
+    g0 = jnp.sqrt(grad_sq_traj[k_first, jnp.arange(m)] + 1e-12)
     g_last = jnp.sqrt(grad_sq_traj[k_last, jnp.arange(m)] + 1e-12)
     alive = active_steps > 0
     ratios = jnp.where(alive, g_last / g0, 0.0)
@@ -476,18 +483,26 @@ class DFedRW:
         return plan, bidx, agg
 
     def plan_walks(
-        self, state: DFedRWState, topo: Topology | None = None
+        self, state: DFedRWState, topo: Topology | None = None,
+        m: int | None = None,
     ) -> tuple[WalkPlan, np.ndarray]:
         """Sample the round's M walk trajectories plus their per-step batch
         indices (one protocol-rng draw order shared by every engine and by
         the virtual-time simulator — repro.sim truncates the returned plan
         before building the aggregation plan). ``topo`` overrides the bound
-        topology (time-varying graphs)."""
+        topology (time-varying graphs); ``m`` overrides the chain count —
+        the fully-asynchronous simulator samples fresh chains only into the
+        slots freed at the last trigger, so a partially-busy window plans
+        fewer than ``cfg.m_chains`` walks (m=None keeps the config count and
+        the draw order the synchronous engine uses)."""
         cfg, rng = self.cfg, self.rng
         topo = self.topo if topo is None else topo
+        m_chains = cfg.m_chains if m is None else int(m)
+        assert m is None or not cfg.chain_mode, \
+            "chain_mode chains persist by construction; partial refills are undefined"
         plan = sample_walks(
             topo,
-            cfg.m_chains,
+            m_chains,
             cfg.k_walk,
             rng,
             straggler=cfg.straggler,
@@ -511,7 +526,7 @@ class DFedRW:
             sub = idx_mat[flat_dev[:, None], cols[:, :b_slow]]
             tiled = np.tile(sub, (1, reps))[:, : cfg.batch_size]
             bidx = np.where(slow[flat_dev][:, None], tiled, bidx)
-        bidx = bidx.reshape(cfg.m_chains, cfg.k_walk, cfg.batch_size)
+        bidx = bidx.reshape(m_chains, cfg.k_walk, cfg.batch_size)
         return plan, bidx
 
     def plan_aggregation(
@@ -580,12 +595,16 @@ class DFedRW:
         hop_bits = wire_bits(d_params, bits)
         n = self.topo.n
         # Walk hand-offs: each cross-device hop sends params (or quantized
-        # diff); the sender pays (send side). Edge (k -> k+1) exists while
-        # step k+1 is inside the chain's realized length K_m.
+        # diff); the sender pays (send side). Edge (k-1 -> k) exists when
+        # step k executed — mask-driven, so the asynchronous simulator's
+        # window views charge a hop in the window its *destination* step
+        # runs (an in-flight hand-off at a trigger is billed on arrival,
+        # through the resumed chain's masked anchor column). For the
+        # synchronous planner's prefix masks this is exactly
+        # "step k+1 inside the realized length K_m".
         src = plan.devices[:, :-1]
         dst = plan.devices[:, 1:]
-        steps = np.arange(plan.k_max - 1)[None, :]
-        live = (steps + 1 < plan.k_m[:, None]) & (src != dst)
+        live = plan.mask[:, 1:] & (src != dst)
         per_dev = np.bincount(src[live].ravel(), minlength=n).astype(np.float64)
         # Aggregation: each participating device l sends its (quantized diff)
         # model to the aggregators that list it.

@@ -14,7 +14,46 @@ import numpy as np
 
 from repro.core.graph import Topology
 
-__all__ = ["WalkPlan", "sample_walks", "StragglerModel", "gamma_inexactness"]
+__all__ = [
+    "WalkPlan",
+    "ChainResume",
+    "sample_walks",
+    "StragglerModel",
+    "gamma_inexactness",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainResume:
+    """Cut-state of walk chains at an aggregation trigger.
+
+    The fully-asynchronous simulator (repro.sim, ``policy="overlap"``) lets a
+    chain span multiple aggregation triggers: when a trigger fires, the chain
+    contributes the prefix of steps it completed *this window* (Eq. 11/14
+    partial updates) and then keeps walking instead of being discarded. The
+    runner's internal slot planner holds the full resumable state (remaining
+    trajectory + batch indices + pending events); this record is the public
+    summary it attaches to the executed window's :class:`WalkPlan` — the
+    round records, recorded traces and tests read chain liveness, lifetime
+    progress and anchors from here.
+
+    live:   (M,) bool  — chain still in flight after the trigger (it neither
+                          finished its K_m steps nor was churn-killed).
+    k_done: (M,) int32 — steps completed over the chain's whole life so far.
+    anchor: (M,) int32 — device whose row holds each chain's current model:
+                          the device of its last completed step, i.e. the row
+                          the w^{t,last} scatter wrote (a trigger therefore
+                          "refreshes" a resumed chain with whatever that row
+                          holds after aggregation — see repro.sim.runner).
+    """
+
+    live: np.ndarray
+    k_done: np.ndarray
+    anchor: np.ndarray
+
+    @property
+    def n_live(self) -> int:
+        return int(self.live.sum())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -22,25 +61,38 @@ class WalkPlan:
     """One communication round's worth of random-walk trajectories.
 
     devices: (M, K_max) int32 — device visited at step k of chain m.
-    mask:    (M, K_max) bool  — True where the chain is still active
-                                 (chain m performs K_m <= K_max steps).
-    k_m:     (M,) int32       — realized per-chain walk lengths.
+    mask:    (M, K_max) bool  — True where the chain performs step k. The
+        synchronous planner emits *prefix* masks (chain m performs its first
+        K_m <= K_max steps); the asynchronous simulator's *window views* may
+        mask out column 0 — a resumed chain's leading column is its anchor
+        device, a pure re-gather of the model it left there, not a step.
+    k_m:     (M,) int32       — number of executed steps (= mask.sum(1)).
     last_device: (M,) int32   — device holding w^{t,last} of each chain.
     timestamps: (M, K_max) f64 | None — virtual-time completion instant of
         each hop's local step, filled in by the discrete-event simulator
         (repro.sim); NaN where the step never executed. The synchronous
         engine leaves it None.
+    resume: ChainResume | None — live state of chains spanning past this
+        plan's trigger (repro.sim ``policy="overlap"``); None everywhere
+        else.
     """
 
     devices: np.ndarray
     mask: np.ndarray
     k_m: np.ndarray
     timestamps: np.ndarray | None = None
+    resume: ChainResume | None = None
 
     @property
     def last_device(self) -> np.ndarray:
-        idx = np.maximum(self.k_m - 1, 0)
-        return self.devices[np.arange(self.devices.shape[0]), idx]
+        """Device of each chain's last *executed* step (mask-general: window
+        views may lead with a masked anchor column). Chains with no executed
+        step fall back to their column-0 device."""
+        m = self.devices.shape[0]
+        any_active = self.mask.any(axis=1)
+        last = self.k_max - 1 - np.argmax(self.mask[:, ::-1], axis=1)
+        idx = np.where(any_active, last, 0)
+        return self.devices[np.arange(m), idx]
 
     @property
     def m(self) -> int:

@@ -2,17 +2,40 @@
 
 Runs a registered scenario of the discrete-event asynchronous DFedRW
 simulator (repro.sim) and reports per-eval progress plus the end-of-run
-timeline summary (virtual seconds, truncated/dropped chains, events/sec).
+timeline summary (virtual seconds, truncated/resumed/dropped chains,
+events/sec). ``--record`` saves the run as a versioned JSONL event trace
+(repro.sim.trace); ``--replay`` re-executes a recorded trace through the
+flat engine — no device/link/churn simulation — and reproduces the recorded
+run bit-exactly (the same traces are the intended integration fixtures for
+the pod-scale gossip deployment, see docs/SIMULATOR.md).
 
 Examples:
   PYTHONPATH=src python -m repro.launch.sim --list
   PYTHONPATH=src python -m repro.launch.sim --scenario straggler_tail --rounds 30
-  PYTHONPATH=src python -m repro.launch.sim --scenario straggler_tail --policy drop
-  PYTHONPATH=src python -m repro.launch.sim --scenario churn_dropout --bits 8
+  PYTHONPATH=src python -m repro.launch.sim --scenario overlap_async --policy partial
+  PYTHONPATH=src python -m repro.launch.sim --scenario congested_uplink --bits 8
+  PYTHONPATH=src python -m repro.launch.sim --scenario straggler_tail \\
+      --record trace.jsonl
+  PYTHONPATH=src python -m repro.launch.sim --replay trace.jsonl
 """
 from __future__ import annotations
 
 import argparse
+
+
+def _progress_cb(r, metrics, evald, record):
+    print(f"round {record.round:4d}  t={record.t_end:9.1f}s  "
+          f"loss={metrics.train_loss:.4f} acc={evald['accuracy']:.4f}  "
+          f"trunc={record.truncated_chains} resumed={record.resumed_chains} "
+          f"drop={record.dropped_chains} killed={int(record.killed.sum())}")
+
+
+def _summary(result) -> None:
+    final = result.final()
+    print(f"final: acc={final['accuracy']:.4f} best={final['best_accuracy']:.4f} "
+          f"virtual_time={final['virtual_time_s']:.1f}s "
+          f"events={final['events_total']} "
+          f"({final['events_per_sec']:.0f} ev/s host)")
 
 
 def main(argv=None) -> None:
@@ -26,13 +49,19 @@ def main(argv=None) -> None:
     ap.add_argument("--devices", type=int, default=20)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--policy", default="",
-                    choices=["", "partial", "drop"],
+                    choices=["", "partial", "drop", "overlap"],
                     help="deadline policy override (scenarios default to "
-                         "'partial', the paper's partial-update aggregation)")
+                         "'partial', the paper's partial-update aggregation; "
+                         "'overlap' resumes cut chains across windows)")
     ap.add_argument("--bits", type=int, default=0,
                     help="payload quantization override (<32 = QDFedRW; "
                          "0 = scenario default)")
     ap.add_argument("--eval-every", type=int, default=5)
+    ap.add_argument("--record", default="",
+                    help="save the run as a JSONL event trace at this path")
+    ap.add_argument("--replay", default="",
+                    help="replay a recorded JSONL trace (scenario/seed come "
+                         "from its header) instead of simulating")
     args = ap.parse_args(argv)
 
     from repro.sim import build_scenario, list_scenarios
@@ -43,6 +72,35 @@ def main(argv=None) -> None:
         return
 
     import jax
+
+    if args.replay:
+        if args.record:
+            raise SystemExit(
+                "--record and --replay are mutually exclusive: a replay "
+                "re-executes an existing trace, it does not produce one")
+        from repro.sim import SimTrace
+
+        trace = SimTrace.load(args.replay)
+        h = trace.header
+        if not {"scenario", "build_seed", "key_seed"} <= set(h):
+            raise SystemExit(
+                "trace header lacks launcher provenance (scenario/build_seed/"
+                "key_seed): it was recorded in-process via run(record=True); "
+                "replay it with AsyncDFedRW.replay, or record through "
+                "`python -m repro.launch.sim --record`")
+        overrides = dict(h.get("build_overrides", {}))
+        setup = build_scenario(h["scenario"], n=h["n"], seed=h["build_seed"],
+                               **overrides)
+        runner = setup.runner()
+        print(f"replay={args.replay} scenario={h['scenario']} n={h['n']} "
+              f"windows={len(trace.windows)} policy={h['policy']} "
+              f"bits={h['bits']} (trace schema v{h['version']})")
+        result = runner.replay(trace, jax.random.PRNGKey(h["key_seed"]),
+                               setup.x_test, setup.y_test,
+                               eval_every=max(h.get("eval_every", 1), 1),
+                               callback=_progress_cb)
+        _summary(result)
+        return
 
     overrides = {}
     if args.policy:
@@ -58,20 +116,19 @@ def main(argv=None) -> None:
           f"policy={setup.sim.policy} deadline_s={setup.sim.deadline_s} "
           f"bits={setup.cfg.quant.bits}")
 
-    def cb(r, metrics, evald, record):
-        print(f"round {record.round:4d}  t={record.t_end:9.1f}s  "
-              f"loss={metrics.train_loss:.4f} acc={evald['accuracy']:.4f}  "
-              f"trunc={record.truncated_chains} drop={record.dropped_chains} "
-              f"killed={int(record.killed.sum())}")
-
     result = runner.run(setup.rounds, jax.random.PRNGKey(args.seed),
                         setup.x_test, setup.y_test,
-                        eval_every=max(args.eval_every, 1), callback=cb)
-    final = result.final()
-    print(f"final: acc={final['accuracy']:.4f} best={final['best_accuracy']:.4f} "
-          f"virtual_time={final['virtual_time_s']:.1f}s "
-          f"events={final['events_total']} "
-          f"({final['events_per_sec']:.0f} ev/s host)")
+                        eval_every=max(args.eval_every, 1),
+                        callback=_progress_cb, record=bool(args.record))
+    _summary(result)
+    if args.record:
+        # launcher provenance so --replay can rebuild the same scenario
+        result.trace.header.update(
+            scenario=setup.name, build_seed=args.seed, key_seed=args.seed,
+            eval_every=max(args.eval_every, 1), build_overrides=overrides)
+        result.trace.save(args.record)
+        print(f"recorded {len(result.trace.windows)} windows -> {args.record} "
+              f"(replay: python -m repro.launch.sim --replay {args.record})")
 
 
 if __name__ == "__main__":

@@ -3,13 +3,17 @@
 Virtual wall-clock device/link models + churn over the flat round engine:
 the event loop (events.py) schedules walk hops and local SGD steps on a
 virtual clock, deadlines truncate in-flight walks into the paper's
-partial-update aggregation, and all compute replays through the synchronous
-flat engine in one jitted call per deadline window (see runner.py for why
-that is bit-exact). scenarios.py is the declarative registry the launcher
-(repro.launch.sim), benchmarks and tests share.
+partial-update aggregation — or, under ``policy="overlap"``, let chains
+span multiple triggers through a persistent event queue — and all compute
+replays through the synchronous flat engine in one jitted call per deadline
+window (see runner.py for why that is bit-exact). Shared-uplink contention
+(events.UplinkQueue via links.LinkModel) serializes concurrent transfers;
+trace.py records runs as versioned JSONL timelines that replay bit-exactly.
+scenarios.py is the declarative registry the launcher (repro.launch.sim),
+benchmarks and tests share. docs/SIMULATOR.md is the full reference.
 """
 from repro.sim.devices import DeviceFleet, DeviceModelConfig
-from repro.sim.events import Event, EventQueue
+from repro.sim.events import Event, EventQueue, UplinkQueue, UplinkStats
 from repro.sim.links import LinkModel, LinkModelConfig, segment_wire_bits
 from repro.sim.runner import AsyncDFedRW, SimConfig, SimResult, SimRoundRecord
 from repro.sim.scenarios import (
@@ -22,12 +26,19 @@ from repro.sim.scenarios import (
     partitioned_topology,
     register_scenario,
 )
+from repro.sim.trace import (
+    TRACE_SCHEMA,
+    TRACE_SCHEMA_VERSION,
+    SimTrace,
+    WindowTrace,
+)
 
 __all__ = [
-    "Event", "EventQueue",
+    "Event", "EventQueue", "UplinkQueue", "UplinkStats",
     "DeviceFleet", "DeviceModelConfig",
     "LinkModel", "LinkModelConfig", "segment_wire_bits",
     "AsyncDFedRW", "SimConfig", "SimResult", "SimRoundRecord",
     "SCENARIOS", "SimScenario", "SimSetup", "build_scenario", "get_scenario",
     "list_scenarios", "partitioned_topology", "register_scenario",
+    "TRACE_SCHEMA", "TRACE_SCHEMA_VERSION", "SimTrace", "WindowTrace",
 ]

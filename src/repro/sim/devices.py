@@ -53,7 +53,19 @@ class DeviceModelConfig:
 
 
 class DeviceFleet:
-    """n devices with fixed compute rates and lazily-generated churn traces."""
+    """n devices with fixed compute rates and lazily-generated churn traces.
+
+    >>> fleet = DeviceFleet(2, DeviceModelConfig())   # uniform, no churn
+    >>> fleet.step_time(0)                            # base_step_time / rate
+    1.0
+    >>> fleet.is_up(0, 1e9), fleet.avail_at(0, 5.0)   # always available
+    (True, 5.0)
+    >>> slow = DeviceFleet(4, DeviceModelConfig(rate_dist="two_class",
+    ...                                         slow_fraction=1.0,
+    ...                                         slowdown=4.0))
+    >>> slow.step_time(0)                             # 4x slower everywhere
+    4.0
+    """
 
     def __init__(self, n: int, cfg: DeviceModelConfig):
         if cfg.rate_dist not in _RATE_DISTS:

@@ -11,6 +11,15 @@ payload costs ``sum_l (64 + b * d_l)`` bits and an fp32 one ``32 * d`` —
 quantization therefore shortens transfers by the same factor it saves in
 the Eq. 18 accounting, which is what makes QDFedRW *faster*, not just
 cheaper, under a wall-clock deadline.
+
+Shared-uplink contention (``LinkModelConfig(queue=True)``) routes every
+cross-device message through the sender's FIFO transmit queue
+(:class:`repro.sim.events.UplinkQueue`): concurrent hop hand-offs and
+aggregation broadcasts from one device serialize, and ``send`` returns the
+queue-aware arrival instant instead of ``t_ready + transfer_time``. With
+``queue=False`` (the default) ``send`` degenerates to exactly the
+uncontended pricing — bit-identical draws and arithmetic — so contention is
+a strict opt-in refinement of the Eq. 18 communication accounting.
 """
 from __future__ import annotations
 
@@ -21,6 +30,7 @@ import numpy as np
 
 from repro.core.flatten import FlatSpec
 from repro.core.quantization import wire_bits
+from repro.sim.events import UplinkQueue, UplinkStats
 
 __all__ = ["LinkModelConfig", "LinkModel", "segment_wire_bits"]
 
@@ -34,18 +44,55 @@ def segment_wire_bits(spec: FlatSpec, bits: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class LinkModelConfig:
+    """Wire model knobs.
+
+    latency_s / bandwidth_bps / jitter_sigma price one message (see module
+    docstring); ``queue=True`` adds shared-uplink FIFO contention — the
+    per-sender transmit queues live in :class:`repro.sim.events.UplinkQueue`
+    and make ``LinkModel.send`` return queue-aware busy-time arrivals.
+
+    >>> LinkModelConfig().queue          # contention is strictly opt-in
+    False
+    """
+
     latency_s: float = 0.0           # per-message fixed cost
     bandwidth_bps: float = math.inf  # bits/second
     jitter_sigma: float = 0.0        # lognormal sigma of a mean-one multiplier
+    queue: bool = False              # shared-uplink FIFO contention
     seed: int = 0
 
 
 class LinkModel:
-    """Uniform (all-pairs) link model; self-transfers are free."""
+    """Uniform (all-pairs) link model; self-transfers are free.
+
+    ``transfer_time`` is the pure per-message price (latency + bits/bandwidth
+    x jitter); ``send`` is what the event loop calls — it adds FIFO queueing
+    on the sender's uplink when ``cfg.queue`` and is otherwise the identity
+    ``t_ready + transfer_time``:
+
+    >>> lm = LinkModel(LinkModelConfig(latency_s=0.5, bandwidth_bps=100.0))
+    >>> lm.transfer_time(0, 1, 200.0)          # 0.5 + 200/100
+    2.5
+    >>> lm.send(0, 1, 200.0, t_ready=1.0)      # no queue: ready + price
+    3.5
+    >>> lm.transfer_time(0, 0, 1e9)            # self-hop is free
+    0.0
+
+    With contention on, a second concurrent message from the same sender
+    waits for the first to clear the uplink:
+
+    >>> q = LinkModel(LinkModelConfig(latency_s=0.5, bandwidth_bps=100.0,
+    ...                               queue=True))
+    >>> q.send(0, 1, 200.0, t_ready=0.0), q.send(0, 2, 200.0, t_ready=0.0)
+    (2.5, 5.0)
+    >>> q.uplinks.stats[0].queued_s            # the second waited 2.5s
+    2.5
+    """
 
     def __init__(self, cfg: LinkModelConfig):
         self.cfg = cfg
         self._rng = np.random.default_rng([cfg.seed, 2])
+        self.uplinks: UplinkQueue | None = UplinkQueue() if cfg.queue else None
 
     def transfer_time(self, src: int, dst: int, payload_bits: float) -> float:
         if src == dst:
@@ -59,3 +106,27 @@ class LinkModel:
             t *= math.exp(self._rng.normal(-0.5 * cfg.jitter_sigma**2,
                                            cfg.jitter_sigma))
         return t
+
+    def send(self, src: int, dst: int, payload_bits: float,
+             t_ready: float) -> float:
+        """Arrival instant of a message ready to leave ``src`` at ``t_ready``.
+
+        Uncontended (``cfg.queue=False``): exactly
+        ``t_ready + transfer_time(src, dst, bits)`` — same jitter draw order,
+        bit-identical to the queue-free pricing. Contended: the message
+        enters ``src``'s FIFO uplink and its transfer_time becomes *service
+        time*; arrival is when the uplink finishes serving it."""
+        if src == dst:
+            return t_ready
+        service = self.transfer_time(src, dst, payload_bits)
+        if self.uplinks is None:
+            return t_ready + service
+        _, t_done = self.uplinks.enqueue(src, t_ready, service)
+        return t_done
+
+    def uplink_stats(self, device: int) -> UplinkStats | None:
+        """Contention accounting for one sender (None when queue=False or
+        the device never sent)."""
+        if self.uplinks is None:
+            return None
+        return self.uplinks.stats.get(device)

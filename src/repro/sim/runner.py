@@ -27,10 +27,52 @@ reproduces the synchronous trajectory bit-exactly (tests/test_sim_engine.py).
 Straggler policies at the deadline:
 
 * ``"partial"`` — the paper: truncated chains aggregate their completed
-  prefix (their position device holds ``w^{t,last}`` of the prefix).
+  prefix (their position device holds ``w^{t,last}`` of the prefix); the
+  rest of the walk is discarded.
 * ``"drop"``    — the FedAvg-style baseline the paper criticizes: chains
   that did not finish all K steps are discarded entirely, but their hops
   still pay Eq. 18 comm (the work happened, then got thrown away).
+* ``"overlap"`` — fully asynchronous: a chain cut by the trigger still
+  contributes its completed prefix (exactly like ``partial``) but is NOT
+  discarded — the event queue persists across windows, so its in-flight
+  events (a step mid-computation, a hand-off mid-transfer, a wait for a
+  churned-out device) carry over, and the next window's planner samples
+  fresh walks only into the slots that freed up. See "Overlap windows"
+  below.
+
+Overlap windows (``policy="overlap"``)
+--------------------------------------
+The runner keeps ``cfg.m_chains`` persistent chain *slots*. At each trigger
+a slot is freed when its chain finished all K_m steps or was churn-killed;
+live slots resume. The next window's flat-engine call still has fixed
+(M, K) shapes: a resumed chain's row is its remaining planned trajectory,
+prefixed with a masked *anchor column* — the device of its last completed
+step, whose row the ``w^{t,last}`` scatter wrote. The masked column updates
+nothing and scatters nothing; it exists purely so the start-of-window gather
+``device_flat[devices[:, 0]]`` re-reads the chain's model. Two consequences,
+both deliberate:
+
+* a trigger *refreshes* in-flight work — if the anchor device aggregated
+  (or another chain later overwrote its row), the resumed chain continues
+  from that newer model, which is precisely the asynchronous-gossip
+  semantics the overlap policy models; the TIMING of the in-flight events
+  is meanwhile preserved exactly by the persistent queue;
+* the in-flight hand-off is billed on arrival: mask-driven Eq. 18
+  accounting charges edge (anchor -> first resumed step) in the window the
+  destination step executes.
+
+When no chain spans a window boundary every slot refills at once, the
+planner draws are identical to the synchronous engine's, and the whole path
+is bit-exact vs both ``partial`` and the synchronous engine — the parity
+anchor that keeps every overlap result grounded.
+
+Recorded traces
+---------------
+``run(record=True)`` captures each window's executed plan, batch indices,
+aggregation plan and virtual-time bracket into a versioned JSONL trace
+(``repro.sim.trace``); ``replay`` feeds a trace back through the flat engine
+with no device/link/churn simulation and reproduces the recorded run
+bit-exactly. ``launch/sim.py --record/--replay`` is the CLI.
 """
 from __future__ import annotations
 
@@ -45,32 +87,62 @@ import numpy as np
 from repro.core.dfedrw import DFedRW, DFedRWConfig, DFedRWState, RoundMetrics
 from repro.core.graph import Topology
 from repro.core.metrics import History
-from repro.core.walk import WalkPlan
+from repro.core.walk import ChainResume, WalkPlan
 from repro.data.synthetic import FederatedDataset
 from repro.models.fnn import SmallModel
 from repro.sim.devices import DeviceFleet, DeviceModelConfig
 from repro.sim.events import Event, EventQueue
 from repro.sim.links import LinkModel, LinkModelConfig, segment_wire_bits
+from repro.sim.trace import SimTrace, WindowTrace, make_header
 
 __all__ = ["SimConfig", "SimRoundRecord", "SimResult", "AsyncDFedRW"]
 
-_POLICIES = ("partial", "drop")
+_POLICIES = ("partial", "drop", "overlap")
 
 
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
-    """Wall-clock model wrapped around a DFedRWConfig."""
+    """Wall-clock model wrapped around a DFedRWConfig.
+
+    ``deadline_s`` is the aggregation-trigger period (None = the synchronous
+    barrier: wait for every chain); ``policy`` picks what happens to chains
+    the trigger cuts — see the module docstring.
+
+    >>> SimConfig().policy, SimConfig().deadline_s   # barrier + paper policy
+    ('partial', None)
+    >>> SimConfig(deadline_s=5.0, policy="overlap").policy
+    'overlap'
+    """
 
     devices: DeviceModelConfig = dataclasses.field(default_factory=DeviceModelConfig)
     links: LinkModelConfig = dataclasses.field(default_factory=LinkModelConfig)
     deadline_s: float | None = None   # aggregation trigger period; None = the
                                       # synchronous barrier (wait for all chains)
-    policy: str = "partial"           # "partial" | "drop" (see module docstring)
+    policy: str = "partial"           # "partial" | "drop" | "overlap"
+
+
+@dataclasses.dataclass
+class _Slot:
+    """One persistent chain slot of the asynchronous runner (host state)."""
+
+    devices: np.ndarray        # (K,) full planned trajectory
+    k_m: int                   # realized planned length (straggler model)
+    bidx: np.ndarray           # (K, B) per-step batch indices drawn at birth
+    ts: np.ndarray             # (K,) absolute completion instants (NaN=never)
+    k_done: int = 0            # lifetime completed steps
+    win_start: int = 0         # k_done when the current window opened
+    killed: bool = False       # device churned out mid-step: chain is dead
 
 
 @dataclasses.dataclass
 class SimRoundRecord:
-    """Host-side timeline bookkeeping of one simulated round."""
+    """Host-side timeline bookkeeping of one simulated window.
+
+    Under ``policy="overlap"`` the per-chain columns describe the chain
+    occupying each slot at this trigger: ``k_planned``/``k_done`` are
+    lifetime totals (a resumed chain keeps accumulating), ``k_exec`` counts
+    the steps executed in THIS window, and ``resumed`` marks chains that
+    continue past the trigger."""
 
     round: int
     t_start: float
@@ -78,19 +150,26 @@ class SimRoundRecord:
     t_end: float                      # after aggregation messages land
     events: int                       # events dispatched this round
     host_loop_s: float                # wall time spent in the event loop
-    k_planned: np.ndarray             # (M,) sampled walk lengths
-    k_done: np.ndarray                # (M,) steps completed in virtual time
-    k_exec: np.ndarray                # (M,) steps actually aggregated (policy)
+    k_planned: np.ndarray             # (M,) planned walk lengths
+    k_done: np.ndarray                # (M,) lifetime steps completed in virtual time
+    k_exec: np.ndarray                # (M,) steps aggregated this window (policy)
     killed: np.ndarray                # (M,) bool: device churned out mid-step
     agg_latency_s: float
+    resumed: np.ndarray | None = None # (M,) bool: chain spans past this trigger
 
     @property
     def truncated_chains(self) -> int:
         return int((self.k_done < self.k_planned).sum())
 
     @property
+    def resumed_chains(self) -> int:
+        return 0 if self.resumed is None else int(self.resumed.sum())
+
+    @property
     def dropped_chains(self) -> int:
-        return int(((self.k_exec == 0) & (self.k_planned > 0)).sum())
+        res = (np.zeros_like(self.killed) if self.resumed is None
+               else self.resumed)
+        return int(((self.k_exec == 0) & (self.k_planned > 0) & ~res).sum())
 
 
 @dataclasses.dataclass
@@ -101,6 +180,7 @@ class SimResult:
     virtual_time_s: float = 0.0
     events_total: int = 0
     host_loop_s: float = 0.0
+    trace: SimTrace | None = None     # run(record=True) / replay provenance
 
     @property
     def events_per_sec(self) -> float:
@@ -121,6 +201,27 @@ class AsyncDFedRW:
     list of ``(t_from_s, Topology)`` entries; each round runs on the entry
     active at its start instant (partition-then-heal scenarios). All entries
     must keep the device count.
+
+    A minimal run (uniform rates, free links, synchronous barrier — the
+    configuration that reproduces the flat engine bit-exactly):
+
+    >>> import jax, numpy as np
+    >>> from repro.core import DFedRWConfig, make_topology
+    >>> from repro.core.heterogeneity import partition_similarity
+    >>> from repro.data import FederatedDataset, synthetic_image_classification
+    >>> from repro.models import make_fnn
+    >>> x, y = synthetic_image_classification(n_samples=200, seed=0)
+    >>> part = partition_similarity(y, 4, 50, np.random.default_rng(0))
+    >>> data = FederatedDataset.from_partition(x, y, part)
+    >>> sim = AsyncDFedRW(make_fnn((16,)), data, make_topology("ring", 4),
+    ...                   DFedRWConfig(m_chains=2, k_walk=2, batch_size=8),
+    ...                   SimConfig())
+    >>> state = sim.init_state(jax.random.PRNGKey(0))
+    >>> state, metrics, rec = sim.run_round(state, jax.random.PRNGKey(1))
+    >>> bool((rec.k_done == rec.k_planned).all())  # barrier: all completed
+    True
+    >>> rec.t_end                             # K steps x 1s at rate 1.0
+    2.0
     """
 
     def __init__(
@@ -134,6 +235,10 @@ class AsyncDFedRW:
     ):
         assert cfg.engine == "flat", "the simulator batches into the flat engine"
         assert sim.policy in _POLICIES, sim.policy
+        if sim.policy == "overlap" and cfg.chain_mode:
+            raise NotImplementedError(
+                "chain_mode chains already persist across rounds; overlap "
+                "slots would need a second notion of chain identity")
         self.engine = DFedRW(model, data, topo, cfg)
         self.sim = sim
         self.fleet = DeviceFleet(topo.n, sim.devices)
@@ -141,6 +246,8 @@ class AsyncDFedRW:
         self.hop_bits = segment_wire_bits(self.engine.flat_spec, cfg.quant.bits)
         self.queue = EventQueue()
         self.t = 0.0
+        self._slots: list[_Slot | None] = [None] * cfg.m_chains
+        self._trace: SimTrace | None = None
         if topology_schedule is not None:
             topology_schedule = sorted(topology_schedule, key=lambda e: e[0])
             assert all(tp.n == topo.n for _, tp in topology_schedule)
@@ -156,69 +263,207 @@ class AsyncDFedRW:
         return topo
 
     # ------------------------------------------------------------ timeline
+    def _handle_event(self, slots: list, ev: Event) -> None:
+        """One event of the walk timeline (shared by run_round and the
+        standalone timing probe). Freed slots never have pending events —
+        a chain is only freed once it has nothing left in the queue
+        (finished after its last sgd, or killed without a re-push)."""
+        slot = slots[ev.chain]
+        fleet, link, q = self.fleet, self.link, self.queue
+        mi, k = ev.chain, ev.step
+        dev = int(slot.devices[k])
+        if ev.kind == "hop":
+            up = fleet.avail_at(dev, ev.time)
+            if up > ev.time:          # wait out the down interval
+                q.push(up, "hop", chain=mi, step=k)
+                return
+            done_t = ev.time + fleet.step_time(dev)
+            if fleet.down_during(dev, ev.time, done_t) is not None:
+                slot.killed = True    # device lost mid-step: chain ends
+                return                # with its completed prefix
+            q.push(done_t, "sgd", chain=mi, step=k)
+        else:  # "sgd": step k completed on dev at ev.time
+            slot.k_done = k + 1
+            slot.ts[k] = ev.time
+            if k + 1 < slot.k_m:
+                nxt = int(slot.devices[k + 1])
+                t_arr = link.send(dev, nxt, self.hop_bits, ev.time)
+                q.push(t_arr, "hop", chain=mi, step=k + 1)
+
     def simulate_walk_timing(
         self, plan: WalkPlan, t0: float, deadline: float = math.inf
     ) -> tuple[np.ndarray, np.ndarray, np.ndarray, int, float]:
-        """Run the round's hop/sgd event timeline (no compute).
+        """Standalone timing probe: run a plan's hop/sgd event timeline (no
+        compute, no slot persistence — it clears the shared event queue AND
+        any uplink-contention backlog, so don't interleave with an overlap
+        run in flight: the probe starts from an idle network).
 
         Returns ``(k_done, timestamps, killed, events, host_loop_s)`` where
         ``k_done[m]`` counts local steps chain m completed by ``deadline``,
         ``timestamps[m, k]`` is step k's completion instant (NaN if never),
         and ``killed[m]`` marks chains whose device churned out mid-step.
         """
-        fleet, link, q = self.fleet, self.link, self.queue
         m = plan.m
-        k_done = np.zeros(m, dtype=np.int32)
-        timestamps = np.full((m, plan.k_max), np.nan)
-        killed = np.zeros(m, dtype=bool)
-        q.clear(now=t0)
+        slots: list = [
+            _Slot(devices=plan.devices[mi], k_m=int(plan.k_m[mi]),
+                  bidx=np.zeros((plan.k_max, 0), dtype=np.int64),
+                  ts=np.full(plan.k_max, np.nan))
+            for mi in range(m)
+        ]
+        self.queue.clear(now=t0)
+        if self.link.uplinks is not None:
+            self.link.uplinks.clear()
         for mi in range(m):
-            if plan.k_m[mi] > 0:
-                q.push(t0, "hop", chain=mi, step=0)
-
-        def handle(ev: Event) -> None:
-            mi, k = ev.chain, ev.step
-            dev = int(plan.devices[mi, k])
-            if ev.kind == "hop":
-                up = fleet.avail_at(dev, ev.time)
-                if up > ev.time:          # wait out the down interval
-                    q.push(up, "hop", chain=mi, step=k)
-                    return
-                done_t = ev.time + fleet.step_time(dev)
-                if fleet.down_during(dev, ev.time, done_t) is not None:
-                    killed[mi] = True     # device lost mid-step: chain ends
-                    return                # with its completed prefix
-                q.push(done_t, "sgd", chain=mi, step=k)
-            else:  # "sgd": step k completed on dev at ev.time
-                k_done[mi] = k + 1
-                timestamps[mi, k] = ev.time
-                if k + 1 < plan.k_m[mi]:
-                    nxt = int(plan.devices[mi, k + 1])
-                    dt = link.transfer_time(dev, nxt, self.hop_bits)
-                    q.push(ev.time + dt, "hop", chain=mi, step=k + 1)
-
+            if slots[mi].k_m > 0:
+                self.queue.push(t0, "hop", chain=mi, step=0)
         t_host = _time.perf_counter()
-        events = q.drain(handle, until=deadline)
+        events = self.queue.drain(
+            lambda ev: self._handle_event(slots, ev), until=deadline)
         host_loop_s = _time.perf_counter() - t_host
-        return k_done, timestamps, killed, events, host_loop_s
+        k_done = np.array([s.k_done for s in slots], dtype=np.int32)
+        ts = np.stack([s.ts for s in slots])
+        killed = np.array([s.killed for s in slots], dtype=bool)
+        return k_done, ts, killed, events, host_loop_s
 
-    def _agg_latency(self, agg: tuple, n: int) -> float:
+    def _agg_latency(self, agg: tuple, n: int, t_trigger: float) -> float:
         """Virtual time until the slowest Eq. 14 message lands (senders are
-        the neighbors each aggregator lists; self-rows are free)."""
+        the neighbors each aggregator lists; self-rows are free). Under
+        shared-uplink contention each sender's messages serialize through
+        its FIFO transmit queue — and keep it busy into the next window, so
+        an aggregation burst congests the walks that follow."""
         agg_devices, agg_rows, agg_w = agg
-        worst = 0.0
+        worst = t_trigger
         for a, row, w in zip(agg_devices, agg_rows, agg_w):
             if a >= n:
                 continue  # pad slot
             for src, wi in zip(row, w):
                 if wi > 0.0 and src != a:
-                    worst = max(worst, self.link.transfer_time(
-                        int(src), int(a), self.hop_bits))
-        return worst
+                    worst = max(worst, self.link.send(
+                        int(src), int(a), self.hop_bits, t_trigger))
+        return worst - t_trigger
+
+    # ------------------------------------------------------- window planner
+    def _fill_slots(self, state: DFedRWState, topo: Topology,
+                    t0: float) -> None:
+        """Sample fresh walks into every free slot and push their initial
+        hop events. With all M slots free (every non-overlap window, and
+        overlap windows no chain spans) this is exactly the synchronous
+        planner's draw order — the parity anchor."""
+        free = [i for i, s in enumerate(self._slots) if s is None]
+        if free:
+            m = None if len(free) == self.engine.cfg.m_chains else len(free)
+            plan, bidx = self.engine.plan_walks(state, topo=topo, m=m)
+            for j, slot_i in enumerate(free):
+                self._slots[slot_i] = _Slot(
+                    devices=plan.devices[j], k_m=int(plan.k_m[j]),
+                    bidx=bidx[j], ts=np.full(plan.k_max, np.nan))
+        fresh = set(free)
+        for slot_i, slot in enumerate(self._slots):
+            slot.win_start = slot.k_done
+            # resumed slots already carry exactly one pending event
+            if slot_i in fresh and slot.k_m > 0:
+                self.queue.push(t0, "hop", chain=slot_i, step=0)
+
+    def _window_view(self, deadline_hit: bool) -> tuple:
+        """Assemble the window's fixed-shape (M, K) engine view from the
+        slots: fresh rows are their full planned trajectory with the
+        executed prefix masked True; resumed rows lead with the masked
+        anchor column (last completed step's device) followed by the
+        remaining trajectory, padded by repeating the final entry (padding
+        is masked out but keeps the monitoring-loss batch real)."""
+        cfg = self.engine.cfg
+        m_sl, k = cfg.m_chains, cfg.k_walk
+        b = self._slots[0].bidx.shape[1]
+        w_dev = np.zeros((m_sl, k), dtype=np.int32)
+        w_mask = np.zeros((m_sl, k), dtype=bool)
+        w_bidx = np.zeros((m_sl, k, b), dtype=np.int64)
+        w_ts = np.full((m_sl, k), np.nan)
+        k_planned = np.zeros(m_sl, dtype=np.int32)
+        k_done = np.zeros(m_sl, dtype=np.int32)
+        killed = np.zeros(m_sl, dtype=bool)
+        finished = np.zeros(m_sl, dtype=bool)
+        anchor = np.zeros(m_sl, dtype=np.int32)
+        for mi, slot in enumerate(self._slots):
+            j0, j1 = slot.win_start, slot.k_done
+            shift = max(j0 - 1, 0)
+            seg = slot.devices[shift:]
+            bseg = slot.bidx[shift:]
+            pad = k - seg.shape[0]
+            if pad:
+                seg = np.concatenate([seg, np.repeat(seg[-1:], pad)])
+                bseg = np.concatenate([bseg, np.repeat(bseg[-1:], pad, axis=0)])
+            w_dev[mi] = seg
+            w_bidx[mi] = bseg
+            w_mask[mi, j0 - shift:j1 - shift] = True
+            exec_cols = np.arange(j0 - shift, j1 - shift)
+            w_ts[mi, exec_cols] = slot.ts[j0:j1]
+            k_planned[mi] = slot.k_m
+            k_done[mi] = j1
+            killed[mi] = slot.killed
+            finished[mi] = j1 >= slot.k_m
+            anchor[mi] = slot.devices[max(j1 - 1, 0)]
+        live = (~finished & ~killed
+                if (self.sim.policy == "overlap" and deadline_hit)
+                else np.zeros(m_sl, dtype=bool))
+        resume = ChainResume(live=live, k_done=k_done, anchor=anchor)
+        return (w_dev, w_mask, w_bidx, w_ts, k_planned, killed, finished,
+                resume)
 
     # ----------------------------------------------------------------- run
     def init_state(self, key: jax.Array) -> DFedRWState:
         return self.engine.init_state(key)
+
+    def _reset_timeline(self) -> None:
+        """Rewind the virtual timeline for a fresh run on this runner: the
+        clock, the chain slots, pending events and uplink queue state all
+        reset (a second run must not resume the previous run's chains
+        against re-initialized params). NOTE the protocol/jitter RNG
+        streams deliberately do NOT rewind — like the synchronous engine,
+        a runner streams its host rng across everything it executes, so
+        same-seed reproducibility means a fresh runner, not a reused one."""
+        self.t = 0.0
+        self._slots = [None] * self.engine.cfg.m_chains
+        self._trace = None
+        self.queue.clear(now=0.0)
+        if self.link.uplinks is not None:
+            self.link.uplinks.clear()
+
+    def _drive(
+        self,
+        windows: int,
+        key: jax.Array,
+        x_test: np.ndarray | None,
+        y_test: np.ndarray | None,
+        eval_every: int,
+        callback: Callable | None,
+        step: Callable,
+        trace: SimTrace | None,
+    ) -> SimResult:
+        """Shared run/replay driver: init, per-window step, eval cadence,
+        result assembly — one implementation so the bit-identical-replay
+        contract cannot drift between the two paths."""
+        state = self.init_state(key)
+        hist = History()
+        records: list[SimRoundRecord] = []
+        for r in range(windows):
+            key, sub = jax.random.split(key)
+            state, metrics, record_r = step(state, sub, r)
+            records.append(record_r)
+            if x_test is not None and ((r + 1) % eval_every == 0
+                                       or r == windows - 1):
+                evald = self.engine.evaluate(state, x_test, y_test)
+                hist.record(metrics, evald, state)
+                if callback is not None:
+                    callback(r, metrics, evald, record_r)
+        return SimResult(
+            history=hist,
+            records=records,
+            state=state,
+            virtual_time_s=self.t,
+            events_total=sum(rec.events for rec in records),
+            host_loop_s=sum(rec.host_loop_s for rec in records),
+            trace=trace,
+        )
 
     def run_round(
         self, state: DFedRWState, key: jax.Array
@@ -226,32 +471,62 @@ class AsyncDFedRW:
         sim = self.sim
         t0 = self.t
         topo = self.topo_at(t0)
-        plan, bidx = self.engine.plan_walks(state, topo=topo)
+        overlap = sim.policy == "overlap"
+        if not overlap:
+            # lockstep policies: every trigger clears the board — fresh
+            # chains each window, no events carried over
+            self._slots = [None] * self.engine.cfg.m_chains
+            self.queue.clear(now=t0)
+        self._fill_slots(state, topo, t0)
         deadline = math.inf if sim.deadline_s is None else t0 + sim.deadline_s
-        k_done, ts, killed, events, loop_s = self.simulate_walk_timing(
-            plan, t0, deadline)
-        trunc = plan.truncated(k_done, timestamps=ts)
+        t_host = _time.perf_counter()
+        events = self.queue.drain(
+            lambda ev: self._handle_event(self._slots, ev), until=deadline)
+        loop_s = _time.perf_counter() - t_host
+
+        (w_dev, w_mask, w_bidx, w_ts, k_planned, killed, finished,
+         resume) = self._window_view(math.isfinite(deadline))
+        win_plan = WalkPlan(
+            devices=w_dev, mask=w_mask,
+            k_m=w_mask.sum(axis=1).astype(np.int32), timestamps=w_ts,
+            resume=resume)
         if sim.policy == "drop":
-            finished = (k_done >= plan.k_m) & ~killed
-            exec_plan = plan.truncated(np.where(finished, k_done, 0),
-                                       timestamps=ts)
+            exec_mask = w_mask & finished[:, None]
+            exec_plan = WalkPlan(devices=w_dev, mask=exec_mask,
+                                 k_m=exec_mask.sum(axis=1).astype(np.int32),
+                                 timestamps=w_ts, resume=resume)
         else:
-            exec_plan = trunc
+            exec_plan = win_plan
         agg = self.engine.plan_aggregation(exec_plan, topo=topo)
         if self.fleet.cfg.has_churn:
             t_trigger = deadline if math.isfinite(deadline) else self.queue.now
             agg = self._drop_down_aggregators(agg, t_trigger)
-        agg_lat = self._agg_latency(agg, topo.n)
         t_compute_end = deadline if math.isfinite(deadline) else max(
             self.queue.now, t0)
+        agg_lat = self._agg_latency(agg, topo.n, t_compute_end)
         self.t = t_compute_end + agg_lat
         new_state, metrics = self.engine.execute_round(
-            state, exec_plan, bidx, agg, key, account_plan=trunc)
+            state, exec_plan, w_bidx, agg, key, account_plan=win_plan)
+        # records and traces read the cut-state from the plan's ChainResume
         record = SimRoundRecord(
             round=new_state.round, t_start=t0, t_compute_end=t_compute_end,
             t_end=self.t, events=events, host_loop_s=loop_s,
-            k_planned=plan.k_m.copy(), k_done=k_done, k_exec=exec_plan.k_m.copy(),
-            killed=killed, agg_latency_s=agg_lat)
+            k_planned=k_planned, k_done=resume.k_done,
+            k_exec=exec_plan.k_m.copy(), killed=killed,
+            agg_latency_s=agg_lat, resumed=resume.live)
+        if self._trace is not None:
+            self._trace.windows.append(WindowTrace(
+                round=record.round, t_start=t0, t_compute_end=t_compute_end,
+                t_end=self.t, agg_latency_s=agg_lat, events=events,
+                host_loop_s=loop_s, k_planned=k_planned,
+                k_done=resume.k_done, killed=killed, resumed=resume.live,
+                devices=w_dev, exec_mask=exec_plan.mask, account_mask=w_mask,
+                timestamps=w_ts, bidx=w_bidx, agg_devices=agg[0],
+                agg_rows=agg[1], agg_weights=agg[2]))
+        # free finished/killed slots; live chains carry their pending event
+        for mi, slot in enumerate(self._slots):
+            if not overlap or slot.killed or slot.k_done >= slot.k_m:
+                self._slots[mi] = None
         return new_state, metrics, record
 
     def _drop_down_aggregators(self, agg: tuple, t: float) -> tuple:
@@ -276,27 +551,75 @@ class AsyncDFedRW:
         y_test: np.ndarray | None = None,
         eval_every: int = 1,
         callback: Callable | None = None,
+        record: bool = False,
     ) -> SimResult:
         """Drive ``rounds`` deadline windows; evaluates every ``eval_every``
         rounds when test data is given (key handling matches
-        core.metrics.train_loop, so seeded runs are comparable)."""
-        state = self.init_state(key)
-        hist = History()
-        records: list[SimRoundRecord] = []
-        for r in range(rounds):
-            key, sub = jax.random.split(key)
-            state, metrics, record = self.run_round(state, sub)
-            records.append(record)
-            if x_test is not None and ((r + 1) % eval_every == 0 or r == rounds - 1):
-                evald = self.engine.evaluate(state, x_test, y_test)
-                hist.record(metrics, evald, state)
-                if callback is not None:
-                    callback(r, metrics, evald, record)
-        return SimResult(
-            history=hist,
-            records=records,
-            state=state,
-            virtual_time_s=self.t,
-            events_total=sum(rec.events for rec in records),
-            host_loop_s=sum(rec.host_loop_s for rec in records),
-        )
+        core.metrics.train_loop, so seeded runs are comparable).
+        ``record=True`` captures the run as a replayable
+        :class:`repro.sim.trace.SimTrace` on ``SimResult.trace``."""
+        cfg = self.engine.cfg
+        self._reset_timeline()
+        self._trace = SimTrace(header=make_header(
+            n=self.engine.topo.n, m_chains=cfg.m_chains, k_walk=cfg.k_walk,
+            batch_size=cfg.batch_size, bits=cfg.quant.bits,
+            policy=self.sim.policy, deadline_s=self.sim.deadline_s,
+            rounds=rounds, eval_every=eval_every)) if record else None
+        return self._drive(
+            rounds, key, x_test, y_test, eval_every, callback,
+            step=lambda state, sub, r: self.run_round(state, sub),
+            trace=self._trace)
+
+    # -------------------------------------------------------------- replay
+    def replay(
+        self,
+        trace: SimTrace,
+        key: jax.Array,
+        x_test: np.ndarray | None = None,
+        y_test: np.ndarray | None = None,
+        eval_every: int = 1,
+        callback: Callable | None = None,
+    ) -> SimResult:
+        """Re-execute a recorded trace through the flat engine — no event
+        loop, no device/link/churn models — reproducing the recorded run's
+        ``SimResult`` bit-exactly (same root ``key`` required; per-window
+        keys re-derive by the same splits as :meth:`run`). The engine this
+        runner wraps must match the trace header's shapes/bits."""
+        h = trace.header
+        cfg = self.engine.cfg
+        expect = dict(n=self.engine.topo.n, m_chains=cfg.m_chains,
+                      k_walk=cfg.k_walk, batch_size=cfg.batch_size,
+                      bits=cfg.quant.bits)
+        for k_, v in expect.items():
+            if h.get(k_) != v:
+                raise ValueError(
+                    f"trace header {k_}={h.get(k_)} != engine {v}; replay "
+                    f"needs the recording configuration")
+        self._reset_timeline()
+
+        def step(state, sub, r):
+            w = trace.windows[r]
+            exec_plan = WalkPlan(
+                devices=w.devices, mask=w.exec_mask,
+                k_m=w.exec_mask.sum(axis=1).astype(np.int32),
+                timestamps=w.timestamps)
+            account_plan = WalkPlan(
+                devices=w.devices, mask=w.account_mask,
+                k_m=w.account_mask.sum(axis=1).astype(np.int32),
+                timestamps=w.timestamps)
+            agg = (w.agg_devices, w.agg_rows, w.agg_weights)
+            state, metrics = self.engine.execute_round(
+                state, exec_plan, w.bidx, agg, sub, account_plan=account_plan)
+            self.t = w.t_end
+            record_r = SimRoundRecord(
+                round=w.round, t_start=w.t_start,
+                t_compute_end=w.t_compute_end, t_end=w.t_end,
+                events=w.events, host_loop_s=w.host_loop_s,
+                k_planned=w.k_planned, k_done=w.k_done,
+                k_exec=exec_plan.k_m.copy(), killed=w.killed,
+                agg_latency_s=w.agg_latency_s, resumed=w.resumed)
+            return state, metrics, record_r
+
+        return self._drive(
+            len(trace.windows), key, x_test, y_test, eval_every, callback,
+            step=step, trace=trace)

@@ -13,7 +13,14 @@ Every builder takes ``(n, seed)`` plus scenario-specific keyword overrides
 and returns a :class:`SimSetup`. Registered scenarios cover the regimes the
 DFL surveys call out as the gap between simulated and deployed systems:
 heavy-tailed stragglers under a deadline, statistical x system heterogeneity
-crosses, partition-then-heal topologies, and device churn mid-walk.
+crosses, partition-then-heal topologies, device churn mid-walk, chains
+overlapping aggregation triggers, and shared-uplink congestion.
+
+>>> sorted(list_scenarios()) # doctest: +NORMALIZE_WHITESPACE
+['churn_dropout', 'congested_uplink', 'dirichlet_deadline', 'overlap_async',
+ 'partition_heal', 'straggler_tail', 'uniform_sync']
+>>> get_scenario("overlap_async").build.__name__
+'_overlap_async'
 """
 from __future__ import annotations
 
@@ -221,6 +228,67 @@ def _partition_heal(n: int = 20, seed: int = 0, heal_after_rounds: int = 10,
                     topo=partitioned_topology(n, 2), cfg=cfg, sim=sim,
                     x_test=xt, y_test=yt, rounds=rounds,
                     topology_schedule=schedule)
+
+
+@register_scenario(
+    "overlap_async",
+    "fully-asynchronous rounds: the deadline is shorter than a median "
+    "chain's walk, so most chains span multiple aggregation triggers; "
+    "policy='overlap' resumes them across windows (persistent event "
+    "queue + anchor-column re-gather), 'partial' truncates, 'drop' discards")
+def _overlap_async(n: int = 20, seed: int = 0, policy: str = "overlap",
+                   rate_sigma: float = 1.25, deadline_factor: float = 0.5,
+                   bits: int = 32, rounds: int = 40, **kw) -> SimSetup:
+    data, xt, yt = _image_setup(n, seed)
+    cfg = DFedRWConfig(m_chains=5, k_walk=5, quant=QuantConfig(bits=bits),
+                       seed=seed)
+    dev = DeviceModelConfig(rate_dist="lognormal", rate_sigma=rate_sigma,
+                            base_step_time=1.0, seed=seed)
+    # deadline_factor=0.5 gives a median-rate chain wall clock for only half
+    # its K steps: nearly every chain is cut mid-walk, so the policies
+    # separate — overlap finishes every walk (across ~1/deadline_factor
+    # windows), partial keeps only prefixes, drop keeps nothing mid-flight.
+    sim = SimConfig(devices=dev,
+                    links=LinkModelConfig(latency_s=0.05, bandwidth_bps=1e9),
+                    deadline_s=deadline_factor * cfg.k_walk * dev.base_step_time,
+                    policy=policy, **kw)
+    return SimSetup(name="overlap_async", model=make_fnn((100,)), data=data,
+                    topo=make_topology("complete", n), cfg=cfg, sim=sim,
+                    x_test=xt, y_test=yt, rounds=rounds)
+
+
+@register_scenario(
+    "congested_uplink",
+    "shared-uplink contention: per-device FIFO transmit queues "
+    "(LinkModelConfig(queue=True)) serialize concurrent hop hand-offs and "
+    "aggregation broadcasts on a bandwidth-limited wire, so busy senders "
+    "stall the chains behind them; quantization (bits=8) relieves the "
+    "queueing, not just the Eq. 18 bill")
+def _congested_uplink(n: int = 20, seed: int = 0, policy: str = "overlap",
+                      bandwidth_bps: float = 2e6, latency_s: float = 0.02,
+                      queue: bool = True, deadline_factor: float = 1.6,
+                      bits: int = 32, rounds: int = 40, m_chains: int = 8,
+                      **kw) -> SimSetup:
+    data, xt, yt = _image_setup(n, seed)
+    # More chains than aggregators on a complete graph: hop fan-out and the
+    # per-trigger aggregation burst (every participant unicasts to each
+    # aggregator listing it) collide on the senders' uplinks. An fp32 model
+    # is ~2.5 Mbit on the wire, so at 2 Mbps a transfer costs ~1.3 s against
+    # a 1 s step — queueing is the dominant term, and 8-bit payloads cut it
+    # ~4x.
+    cfg = DFedRWConfig(m_chains=m_chains, k_walk=5,
+                       quant=QuantConfig(bits=bits), seed=seed)
+    dev = DeviceModelConfig(rate_dist="uniform", base_step_time=1.0,
+                            seed=seed)
+    sim = SimConfig(devices=dev,
+                    links=LinkModelConfig(latency_s=latency_s,
+                                          bandwidth_bps=bandwidth_bps,
+                                          queue=queue),
+                    deadline_s=deadline_factor * cfg.k_walk * dev.base_step_time,
+                    policy=policy, **kw)
+    return SimSetup(name="congested_uplink", model=make_fnn((100,)),
+                    data=data, topo=make_topology("complete", n), cfg=cfg,
+                    sim=sim, x_test=xt, y_test=yt, rounds=rounds)
 
 
 @register_scenario(

@@ -1,0 +1,216 @@
+"""Recorded event traces of the virtual-time DFedRW simulator.
+
+A trace is the complete, replayable decision record of one simulated run:
+for every aggregation window it stores WHAT the event timeline decided —
+which (chain, step) items executed, on which devices, against which batch
+indices, which devices aggregated with which weights, and when everything
+happened on the virtual clock. Replaying a trace feeds those recorded plans
+straight into the flat engine (``AsyncDFedRW.replay``), skipping the
+device/link/churn simulation entirely, and reproduces the recorded
+``SimResult`` bit-exactly — the same property that makes the trace a
+deployment-independent *schedule*: the pod-scale gossip deployment
+(``dist/steps``) can consume the same timeline as an integration fixture
+without any wall-clock modeling (ROADMAP: multi-host gossip bring-up).
+
+JSONL schema (version 1)
+------------------------
+Line 1 is the header object; every further line is one window:
+
+    {"schema": "repro.sim.trace", "version": 1,
+     "n": ..., "m_chains": ..., "k_walk": ..., "batch_size": ...,
+     "bits": ..., "policy": ..., "deadline_s": ...,
+     ...optional launcher context: "scenario", "key_seed", "rounds",
+     "eval_every", "build_overrides"...}
+
+    {"round": 1, "t_start": 0.0, "t_compute_end": 5.0, "t_end": 5.1,
+     "agg_latency_s": 0.1, "events": 40, "host_loop_s": ...,
+     "k_planned": [M], "k_done": [M], "killed": [M], "resumed": [M],
+     "devices": [M][K], "exec_mask": [M][K], "account_mask": [M][K],
+     "timestamps": [M][K] (null = never executed),
+     "bidx": [M][K][B],
+     "agg_devices": [A], "agg_rows": [A][n_agg], "agg_weights": [A][n_agg]}
+
+Numbers round-trip exactly: ints are ints, float64 timestamps serialize via
+repr (shortest round-trip), and the float32 aggregation weights pass through
+float64 losslessly. ``NaN`` timestamps are stored as ``null`` so the files
+stay strict JSON for non-Python consumers.
+
+>>> import numpy as np
+>>> w = WindowTrace(round=1, t_start=0.0, t_compute_end=2.0, t_end=2.5,
+...                 agg_latency_s=0.5, events=4, host_loop_s=0.0,
+...                 k_planned=np.array([2]), k_done=np.array([2]),
+...                 killed=np.array([False]), resumed=np.array([False]),
+...                 devices=np.array([[0, 1]]),
+...                 exec_mask=np.array([[True, True]]),
+...                 account_mask=np.array([[True, True]]),
+...                 timestamps=np.array([[1.0, 2.0]]),
+...                 bidx=np.array([[[0], [1]]]),
+...                 agg_devices=np.array([0]), agg_rows=np.array([[1]]),
+...                 agg_weights=np.array([[1.0]], dtype=np.float32))
+>>> t = SimTrace(header=make_header(n=2, m_chains=1, k_walk=2, batch_size=1,
+...                                 bits=32, policy="partial",
+...                                 deadline_s=None), windows=[w])
+>>> t2 = SimTrace.from_lines(t.to_lines())          # JSONL round trip
+>>> t2.header["version"] == TRACE_SCHEMA_VERSION
+True
+>>> bool(np.all(t2.windows[0].bidx == w.bidx))
+True
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Any, Iterable
+
+import numpy as np
+
+__all__ = [
+    "TRACE_SCHEMA",
+    "TRACE_SCHEMA_VERSION",
+    "WindowTrace",
+    "SimTrace",
+    "make_header",
+]
+
+TRACE_SCHEMA = "repro.sim.trace"
+TRACE_SCHEMA_VERSION = 1
+
+
+def make_header(*, n: int, m_chains: int, k_walk: int, batch_size: int,
+                bits: int, policy: str, deadline_s: float | None,
+                **context: Any) -> dict:
+    """Header line of a v1 trace. The named fields pin the engine shapes a
+    replay must match; ``context`` carries optional launcher provenance
+    (scenario name, key seed, rounds, eval cadence, build overrides)."""
+    head = {
+        "schema": TRACE_SCHEMA,
+        "version": TRACE_SCHEMA_VERSION,
+        "n": int(n),
+        "m_chains": int(m_chains),
+        "k_walk": int(k_walk),
+        "batch_size": int(batch_size),
+        "bits": int(bits),
+        "policy": str(policy),
+        "deadline_s": None if deadline_s is None else float(deadline_s),
+    }
+    head.update(context)
+    return head
+
+
+def _ts_out(ts: np.ndarray) -> list:
+    """(M, K) float64 with NaN holes -> nested lists with nulls."""
+    return [[None if math.isnan(v) else v for v in row] for row in ts.tolist()]
+
+
+def _ts_in(rows: list) -> np.ndarray:
+    return np.array([[math.nan if v is None else v for v in row]
+                     for row in rows], dtype=np.float64)
+
+
+@dataclasses.dataclass
+class WindowTrace:
+    """One aggregation window of a recorded run (see module schema)."""
+
+    round: int
+    t_start: float
+    t_compute_end: float
+    t_end: float
+    agg_latency_s: float
+    events: int
+    host_loop_s: float
+    k_planned: np.ndarray       # (M,) planned walk lengths (absolute)
+    k_done: np.ndarray          # (M,) completed steps (absolute, lifetime)
+    killed: np.ndarray          # (M,) bool churn kills
+    resumed: np.ndarray         # (M,) bool chains continuing past the trigger
+    devices: np.ndarray         # (M, K) window trajectory view
+    exec_mask: np.ndarray       # (M, K) steps the engine executed
+    account_mask: np.ndarray    # (M, K) steps Eq. 18 charged (drop policy pays
+                                #        for work it discards)
+    timestamps: np.ndarray      # (M, K) completion instants (NaN = never)
+    bidx: np.ndarray            # (M, K, B) batch indices
+    agg_devices: np.ndarray     # (A,)
+    agg_rows: np.ndarray        # (A, n_agg)
+    agg_weights: np.ndarray     # (A, n_agg) float32
+
+    def to_json(self) -> dict:
+        return {
+            "round": int(self.round),
+            "t_start": float(self.t_start),
+            "t_compute_end": float(self.t_compute_end),
+            "t_end": float(self.t_end),
+            "agg_latency_s": float(self.agg_latency_s),
+            "events": int(self.events),
+            "host_loop_s": float(self.host_loop_s),
+            "k_planned": np.asarray(self.k_planned).tolist(),
+            "k_done": np.asarray(self.k_done).tolist(),
+            "killed": np.asarray(self.killed).tolist(),
+            "resumed": np.asarray(self.resumed).tolist(),
+            "devices": np.asarray(self.devices).tolist(),
+            "exec_mask": np.asarray(self.exec_mask).tolist(),
+            "account_mask": np.asarray(self.account_mask).tolist(),
+            "timestamps": _ts_out(np.asarray(self.timestamps)),
+            "bidx": np.asarray(self.bidx).tolist(),
+            "agg_devices": np.asarray(self.agg_devices).tolist(),
+            "agg_rows": np.asarray(self.agg_rows).tolist(),
+            "agg_weights": np.asarray(self.agg_weights, dtype=np.float64).tolist(),
+        }
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "WindowTrace":
+        return cls(
+            round=int(obj["round"]),
+            t_start=float(obj["t_start"]),
+            t_compute_end=float(obj["t_compute_end"]),
+            t_end=float(obj["t_end"]),
+            agg_latency_s=float(obj["agg_latency_s"]),
+            events=int(obj["events"]),
+            host_loop_s=float(obj["host_loop_s"]),
+            k_planned=np.asarray(obj["k_planned"], dtype=np.int32),
+            k_done=np.asarray(obj["k_done"], dtype=np.int32),
+            killed=np.asarray(obj["killed"], dtype=bool),
+            resumed=np.asarray(obj["resumed"], dtype=bool),
+            devices=np.asarray(obj["devices"], dtype=np.int32),
+            exec_mask=np.asarray(obj["exec_mask"], dtype=bool),
+            account_mask=np.asarray(obj["account_mask"], dtype=bool),
+            timestamps=_ts_in(obj["timestamps"]),
+            bidx=np.asarray(obj["bidx"], dtype=np.int64),
+            agg_devices=np.asarray(obj["agg_devices"], dtype=np.int32),
+            agg_rows=np.asarray(obj["agg_rows"], dtype=np.int32),
+            agg_weights=np.asarray(obj["agg_weights"], dtype=np.float32),
+        )
+
+
+@dataclasses.dataclass
+class SimTrace:
+    """Header + per-window records; JSONL on disk (one object per line)."""
+
+    header: dict
+    windows: list = dataclasses.field(default_factory=list)
+
+    def to_lines(self) -> list[str]:
+        return [json.dumps(self.header)] + [
+            json.dumps(w.to_json()) for w in self.windows
+        ]
+
+    @classmethod
+    def from_lines(cls, lines: Iterable[str]) -> "SimTrace":
+        it = iter(l for l in lines if l.strip())
+        header = json.loads(next(it))
+        if header.get("schema") != TRACE_SCHEMA:
+            raise ValueError(f"not a {TRACE_SCHEMA} file: {header.get('schema')!r}")
+        if header.get("version") != TRACE_SCHEMA_VERSION:
+            raise ValueError(
+                f"trace version {header.get('version')} != "
+                f"supported {TRACE_SCHEMA_VERSION}")
+        return cls(header=header,
+                   windows=[WindowTrace.from_json(json.loads(l)) for l in it])
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write("\n".join(self.to_lines()) + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "SimTrace":
+        with open(path) as f:
+            return cls.from_lines(f)

@@ -1,0 +1,342 @@
+"""Fully-asynchronous simulator: overlap policy (chains spanning aggregation
+triggers via the resumable chain-start hook), shared-uplink contention
+(per-device FIFO transmit queues), and recorded-trace record/replay.
+
+The acceptance anchors: with contention disabled and no chain spanning a
+window boundary, the async path is bit-exact vs the lockstep runner at fp32
+and bits=8 with trace_count == 1 across windows; a recorded trace replays to
+a bit-identical SimResult; and per-uplink busy-time (occupied span) is never
+less than the sum of that uplink's transfer times.
+"""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import DFedRWConfig, QuantConfig, make_topology
+from repro.core.heterogeneity import partition_similarity
+from repro.data import FederatedDataset, synthetic_image_classification
+from repro.models import make_fnn
+from repro.sim import (
+    AsyncDFedRW,
+    DeviceModelConfig,
+    LinkModel,
+    LinkModelConfig,
+    SimConfig,
+    SimTrace,
+    TRACE_SCHEMA_VERSION,
+    UplinkQueue,
+    build_scenario,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    x, y = synthetic_image_classification(n_samples=1500, seed=0, noise=1.0)
+    part = partition_similarity(y, 8, 50, np.random.default_rng(0))
+    data = FederatedDataset.from_partition(x, y, part)
+    topo = make_topology("complete", 8)
+    model = make_fnn((64,))
+    return data, topo, model
+
+
+def _lockstep_pair(data, topo, model, bits, deadline_s=None):
+    cfg = DFedRWConfig(m_chains=4, k_walk=3, batch_size=32,
+                       quant=QuantConfig(bits=bits), seed=5)
+    mk = lambda policy: AsyncDFedRW(
+        model, data, topo, cfg, SimConfig(deadline_s=deadline_s, policy=policy))
+    return mk("partial"), mk("overlap")
+
+
+# ------------------------------------------------------------ overlap parity
+
+
+@pytest.mark.parametrize("bits", [32, 8])
+def test_overlap_parity_no_boundary_crossing(setup, bits):
+    """Acceptance: when no chain spans a window boundary the overlap policy
+    is BIT-exact vs the lockstep partial runner (itself bit-exact vs the
+    synchronous engine) — here under a real deadline that every chain meets
+    exactly (uniform rates, free links, deadline = K steps), at fp32 and
+    8-bit. One compiled executable on both sides the whole way."""
+    data, topo, model = setup
+    lock, over = _lockstep_pair(data, topo, model, bits, deadline_s=3.0)
+    key = jax.random.PRNGKey(0)
+    sl, so = lock.init_state(key), over.init_state(key)
+    kl = ko = key
+    for _ in range(3):
+        kl, sub_l = jax.random.split(kl)
+        ko, sub_o = jax.random.split(ko)
+        sl, ml, rl = lock.run_round(sl, sub_l)
+        so, mo, ro = over.run_round(so, sub_o)
+        np.testing.assert_array_equal(np.asarray(sl.device_params),
+                                      np.asarray(so.device_params))
+        assert ml.train_loss == mo.train_loss
+        assert ml.comm_bits_round == mo.comm_bits_round
+        assert ml.comm_bits_busiest_round == mo.comm_bits_busiest_round
+        assert ml.gamma_hat == mo.gamma_hat
+        assert rl.t_end == ro.t_end
+        assert ro.resumed_chains == 0          # nothing crossed the boundary
+    assert lock.engine.trace_count == 1 and over.engine.trace_count == 1
+
+
+def test_overlap_chains_span_windows(setup):
+    """deadline = 2 uniform steps against K = 5: every chain needs three
+    windows (2+2+1 steps). The resumable hook must carry chains across
+    triggers at fixed shapes (trace_count == 1), conserve the executed step
+    count, and re-anchor each resumed chain on its last completed device."""
+    data, topo, model = setup
+    cfg = DFedRWConfig(m_chains=4, k_walk=5, batch_size=32, seed=7)
+    sim = AsyncDFedRW(model, data, topo, cfg,
+                      SimConfig(deadline_s=2.0, policy="overlap"))
+    res = sim.run(6, jax.random.PRNGKey(0), record=True)
+    recs, wins = res.records, res.trace.windows
+    # lifetime accumulation: 2, 4, 5 then a fresh generation
+    np.testing.assert_array_equal(recs[0].k_done, 2)
+    np.testing.assert_array_equal(recs[1].k_done, 4)
+    np.testing.assert_array_equal(recs[2].k_done, 5)
+    np.testing.assert_array_equal(recs[3].k_done, 2)
+    assert recs[0].resumed.all() and recs[1].resumed.all()
+    assert not recs[2].resumed.any()           # all finished: slots free up
+    # executed steps across a chain generation sum to K
+    assert int(sum(r.k_exec.sum() for r in recs[:3])) == 4 * 5
+    # window views: a resumed window leads with the masked anchor column,
+    # anchored at the chain's last completed device of the previous window
+    for prev, cur in ((wins[0], wins[1]), (wins[1], wins[2])):
+        assert not cur.exec_mask[:, 0].any()
+        k = prev.exec_mask.shape[1]
+        prev_last_col = k - 1 - np.argmax(prev.exec_mask[:, ::-1], axis=1)
+        prev_last_dev = prev.devices[np.arange(4), prev_last_col]
+        np.testing.assert_array_equal(cur.devices[:, 0], prev_last_dev)
+    # the in-flight hand-off is billed on arrival: every cross-device edge
+    # out of the anchor column is inside the window's account mask
+    assert sim.engine.trace_count == 1
+    assert res.virtual_time_s == pytest.approx(12.0)
+
+
+def test_overlap_completes_walks_tight_deadline(setup):
+    """Under a deadline that cuts most chains, the policies separate on what
+    survives: overlap chains eventually FINISH their planned walks (resumed
+    across windows — no tail is ever lost), lockstep partial finishes
+    strictly fewer (truncated tails are discarded), and drop additionally
+    throws away every executed-but-unfinished prefix while overlap
+    aggregates every step it executes."""
+    data, topo, model = setup
+    cfg = DFedRWConfig(m_chains=4, k_walk=5, batch_size=32, seed=9)
+    dev = DeviceModelConfig(rate_dist="two_class", slow_fraction=0.5,
+                            slowdown=4.0, seed=3)
+    finished, discarded = {}, {}
+    for policy in ("partial", "drop", "overlap"):
+        sim = AsyncDFedRW(model, data, topo, cfg,
+                          SimConfig(devices=dev, deadline_s=5.0, policy=policy))
+        res = sim.run(6, jax.random.PRNGKey(0))
+        finished[policy] = int(sum(
+            (r.k_done == r.k_planned).sum() for r in res.records))
+        if policy != "overlap":
+            # completed-in-window steps the policy refused to aggregate
+            # (k_done is per-window for the lockstep policies)
+            discarded[policy] = int(sum(
+                np.minimum(r.k_done, r.k_planned).sum() - r.k_exec.sum()
+                for r in res.records))
+        assert sim.engine.trace_count == 1
+        if policy == "overlap":
+            # nothing executed is ever discarded and truncation only defers
+            assert all((r.k_exec > 0).any() for r in res.records)
+            assert any(r.resumed_chains > 0 for r in res.records)
+    assert finished["overlap"] > finished["partial"] >= finished["drop"]
+    assert discarded["drop"] > 0 == discarded["partial"]  # drop wastes work
+
+
+def test_overlap_churn_kill_frees_slot(setup):
+    """A churn-killed chain must not resume: its slot refills with a fresh
+    walk at the next trigger and the killed flag never coexists with the
+    resumed flag."""
+    data, topo, model = setup
+    cfg = DFedRWConfig(m_chains=4, k_walk=4, batch_size=32, seed=6)
+    dev = DeviceModelConfig(mean_up_s=3.0, mean_down_s=5.0, seed=7)
+    sim = AsyncDFedRW(model, data, topo, cfg,
+                      SimConfig(devices=dev, deadline_s=8.0, policy="overlap"))
+    state = sim.init_state(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(0)
+    killed_total = 0
+    for _ in range(4):
+        key, sub = jax.random.split(key)
+        state, _, rec = sim.run_round(state, sub)
+        killed_total += int(rec.killed.sum())
+        assert not (rec.killed & rec.resumed).any()
+    assert killed_total > 0
+    assert sim.engine.trace_count == 1
+
+
+# -------------------------------------------------------------- contention
+
+
+@settings(max_examples=20)
+@given(n_msgs=st.integers(1, 40), n_dev=st.integers(1, 4),
+       scale=st.floats(0.01, 10.0))
+def test_uplink_busy_time_property(n_msgs, n_dev, scale):
+    """Per-uplink busy-time (occupied span, first start to last completion)
+    is >= the sum of that uplink's transfer (service) times: FIFO
+    serialization adds gaps and queueing, never concurrency. Starts never
+    precede readiness, and completions are FIFO-monotone per uplink."""
+    rng = np.random.default_rng(int(n_msgs * 1000 + n_dev * 7 + scale))
+    u = UplinkQueue()
+    ready = np.sort(rng.uniform(0.0, 5.0 * scale, size=n_msgs))
+    last_done = {}
+    for t in ready:
+        dev = int(rng.integers(0, n_dev))
+        service = float(rng.uniform(0.0, scale))
+        t_start, t_done = u.enqueue(dev, t, service)
+        assert t_start >= t                      # never starts before ready
+        assert t_done == pytest.approx(t_start + service)
+        assert t_done >= last_done.get(dev, -math.inf)   # FIFO per uplink
+        last_done[dev] = t_done
+    for dev, stat in u.stats.items():
+        assert stat.span_s >= stat.busy_s - 1e-9
+        assert stat.queued_s >= 0.0
+
+
+def test_send_without_queue_is_pure_pricing():
+    """queue=False reproduces the uncontended link pricing BIT-exactly,
+    jitter draws included: send(t) == t + transfer_time(...) draw for draw
+    against a twin model with the same seed."""
+    cfg = dict(latency_s=0.01, bandwidth_bps=1e5, jitter_sigma=0.7, seed=3)
+    lm = LinkModel(LinkModelConfig(**cfg))
+    twin = LinkModel(LinkModelConfig(**cfg))
+    rng = np.random.default_rng(0)
+    t = 0.0
+    for _ in range(50):
+        src, dst = rng.integers(0, 6, size=2)
+        bits = float(rng.integers(1, 10) * 1e4)
+        t += float(rng.uniform(0.0, 1.0))
+        assert lm.send(int(src), int(dst), bits, t) == \
+            t + twin.transfer_time(int(src), int(dst), bits)
+    assert lm.uplinks is None                    # no queue state exists
+
+
+def test_contention_slows_and_accounts(setup):
+    """The congested_uplink regime: with queue=True concurrent transfers
+    serialize, so virtual time can only grow vs queue=False at identical
+    seeds, some message queued behind another, and every uplink satisfies
+    the busy-time inequality on the real event timeline."""
+    data, topo, model = setup
+    cfg = DFedRWConfig(m_chains=6, k_walk=4, batch_size=32, seed=11)
+    times = {}
+    for queue in (False, True):
+        links = LinkModelConfig(latency_s=0.02, bandwidth_bps=2e6, queue=queue)
+        sim = AsyncDFedRW(model, data, topo, cfg,
+                          SimConfig(links=links, deadline_s=8.0,
+                                    policy="overlap"))
+        res = sim.run(3, jax.random.PRNGKey(0))
+        times[queue] = res.virtual_time_s
+        if queue:
+            stats = sim.link.uplinks.stats
+            assert stats and sum(s.sent for s in stats.values()) > 0
+            assert any(s.queued_s > 0.0 for s in stats.values())
+            for s in stats.values():
+                assert s.span_s >= s.busy_s - 1e-9
+    assert times[True] >= times[False]
+
+
+def test_congested_uplink_scenario_builds():
+    setup = build_scenario("congested_uplink", n=10, seed=0, rounds=2)
+    assert setup.sim.links.queue and setup.sim.policy == "overlap"
+    over = build_scenario("overlap_async", n=10, seed=0, policy="partial")
+    assert over.sim.policy == "partial"
+
+
+# ------------------------------------------------------------ trace replay
+
+
+def test_trace_record_replay_bit_identical(setup, tmp_path):
+    """Acceptance: a recorded trace replays to a bit-identical SimResult —
+    device matrix, comm accounting, history and virtual clock — through the
+    JSONL round trip, with the replay running zero event simulation."""
+    data, topo, model = setup
+    xt, yt = synthetic_image_classification(n_samples=400, seed=1, noise=1.0)
+    cfg = DFedRWConfig(m_chains=4, k_walk=4, batch_size=32,
+                       quant=QuantConfig(bits=8), seed=2)
+    dev = DeviceModelConfig(rate_dist="two_class", slow_fraction=0.5,
+                            slowdown=4.0, seed=3)
+    simc = SimConfig(devices=dev, deadline_s=4.0, policy="overlap")
+    rec_run = AsyncDFedRW(model, data, topo, cfg, simc)
+    res = rec_run.run(3, jax.random.PRNGKey(0), x_test=xt, y_test=yt,
+                      eval_every=1, record=True)
+    assert any(r.truncated_chains for r in res.records)  # deadline really cut
+    path = tmp_path / "trace.jsonl"
+    res.trace.save(str(path))
+    trace = SimTrace.load(str(path))
+    assert trace.header["version"] == TRACE_SCHEMA_VERSION
+    assert len(trace.windows) == 3
+
+    replayer = AsyncDFedRW(model, data, topo, cfg, simc)
+    rep = replayer.replay(trace, jax.random.PRNGKey(0), x_test=xt, y_test=yt,
+                          eval_every=1)
+    np.testing.assert_array_equal(np.asarray(res.state.device_params),
+                                  np.asarray(rep.state.device_params))
+    assert res.state.comm_bits_total == rep.state.comm_bits_total
+    assert res.state.comm_bits_busiest == rep.state.comm_bits_busiest
+    assert res.virtual_time_s == rep.virtual_time_s
+    assert res.events_total == rep.events_total
+    assert res.history.test_accuracy == rep.history.test_accuracy
+    assert res.history.train_loss == rep.history.train_loss
+    assert res.history.comm_bits == rep.history.comm_bits
+    assert replayer.engine.trace_count == 1
+    assert replayer.queue.pushed == 0            # no events simulated
+
+
+def test_trace_schema_rejects_mismatches(setup):
+    data, topo, model = setup
+    cfg = DFedRWConfig(m_chains=3, k_walk=3, batch_size=32, seed=4)
+    sim = AsyncDFedRW(model, data, topo, cfg, SimConfig())
+    res = sim.run(1, jax.random.PRNGKey(0), record=True)
+    lines = res.trace.to_lines()
+    with pytest.raises(ValueError, match="not a repro.sim.trace"):
+        SimTrace.from_lines(['{"schema": "something.else", "version": 1}'])
+    bad = dict(res.trace.header, version=99)
+    import json
+    with pytest.raises(ValueError, match="version"):
+        SimTrace.from_lines([json.dumps(bad)] + lines[1:])
+    # replay refuses an engine whose shapes differ from the header's
+    other = AsyncDFedRW(model, data, topo,
+                        DFedRWConfig(m_chains=4, k_walk=3, batch_size=32,
+                                     seed=4), SimConfig())
+    with pytest.raises(ValueError, match="m_chains"):
+        other.replay(SimTrace.from_lines(lines), jax.random.PRNGKey(0))
+
+
+def test_run_reuse_resets_timeline(setup):
+    """A second run() on the same runner must start a fresh timeline — no
+    stale clock, slots, pending events or uplink backlog from the first run
+    (the protocol rng still streams, like the synchronous engine, so only
+    the *timeline* state is compared)."""
+    data, topo, model = setup
+    cfg = DFedRWConfig(m_chains=4, k_walk=5, batch_size=32, seed=13)
+    links = LinkModelConfig(latency_s=0.02, bandwidth_bps=2e6, queue=True)
+    sim = AsyncDFedRW(model, data, topo, cfg,
+                      SimConfig(links=links, deadline_s=2.0, policy="overlap"))
+    first = sim.run(2, jax.random.PRNGKey(0))
+    assert first.records[0].t_start == 0.0
+    assert any(s is not None for s in sim._slots)   # chains left in flight
+    second = sim.run(2, jax.random.PRNGKey(0))
+    assert second.records[0].t_start == 0.0         # clock rewound
+    # all first-window chains are fresh: lifetime k_done is bounded by the
+    # 2 s window (stale chains would carry the previous run's step counts)
+    assert second.records[0].k_done.max() <= 2
+    # uplink backlog cleared: first window's sends start from an idle queue
+    assert all(s.t_first_start < second.virtual_time_s
+               for s in sim.link.uplinks.stats.values())
+    # the standalone timing probe also resets the network: its first
+    # cross-device send starts ~when the first step completes (t ~ 1 s),
+    # not behind the finished run's phantom uplink backlog
+    plan, _ = sim.engine.plan_walks(sim.init_state(jax.random.PRNGKey(2)))
+    sim.simulate_walk_timing(plan, 0.0)
+    assert min(s.t_first_start for s in sim.link.uplinks.stats.values()) < 2.0
+
+
+def test_overlap_rejects_chain_mode(setup):
+    data, topo, model = setup
+    cfg = DFedRWConfig(m_chains=3, k_walk=3, batch_size=32, chain_mode=True)
+    with pytest.raises(NotImplementedError):
+        AsyncDFedRW(model, data, topo, cfg, SimConfig(policy="overlap"))

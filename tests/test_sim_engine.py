@@ -281,7 +281,8 @@ def test_link_pricing_wire_format(setup):
 def test_scenario_registry_complete():
     names = set(list_scenarios())
     assert {"uniform_sync", "straggler_tail", "dirichlet_deadline",
-            "partition_heal", "churn_dropout"} <= names
+            "partition_heal", "churn_dropout", "overlap_async",
+            "congested_uplink"} <= names
     with pytest.raises(ValueError):
         build_scenario("no_such_scenario")
 

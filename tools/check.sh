@@ -17,9 +17,16 @@
 #                             programs (cache/slot sharding over the mesh)
 #                             are exercised for real, not just on 1 device.
 #   tools/check.sh --sim      sim lane: the virtual-time simulator (engine
-#                             parity, deadline/churn semantics, scenario
-#                             registry incl. the slow scenario smoke) plus
-#                             its walk/graph substrate.
+#                             parity, deadline/churn semantics, overlap/
+#                             contention/trace-replay, scenario registry
+#                             incl. the slow scenario smoke) plus its
+#                             walk/graph substrate.
+#   tools/check.sh --docs     docs lane: runnable doctests of the repro.sim
+#                             public API, then tools/docs_check.py — a
+#                             link/anchor/code-path checker over README.md,
+#                             ROADMAP.md and docs/*.md that also verifies
+#                             docs/SIMULATOR.md covers every public
+#                             repro.sim symbol and the trace schema version.
 #
 # Extra args are forwarded to pytest in all lanes.
 set -euo pipefail
@@ -36,7 +43,13 @@ elif [[ "${1:-}" == "--serve" ]]; then
 elif [[ "${1:-}" == "--sim" ]]; then
   shift
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
-    tests/test_sim_engine.py tests/test_walk.py tests/test_graph.py "$@"
+    tests/test_sim_engine.py tests/test_sim_async.py tests/test_walk.py \
+    tests/test_graph.py "$@"
+elif [[ "${1:-}" == "--docs" ]]; then
+  shift
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
+    --doctest-modules src/repro/sim "$@"
+  python tools/docs_check.py
 else
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m "not slow" "$@"
 fi

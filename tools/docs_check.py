@@ -1,0 +1,132 @@
+#!/usr/bin/env python
+"""Documentation link/anchor/coverage checker (tools/check.sh --docs).
+
+Guards the docs against silent rot, with three passes over README.md,
+ROADMAP.md and docs/*.md:
+
+1. **Markdown links** ``[text](target)``: relative targets must exist
+   (resolved from the linking file), and ``#anchors`` must match a heading
+   in the target file (GitHub slug rules: lowercase, punctuation stripped,
+   spaces to hyphens).
+2. **Backticked repo paths**: a `dir/file.py`-shaped token inside backticks
+   must exist — resolved from the repo root, then ``src/``, then
+   ``src/repro/`` (the paper-map shorthand, e.g. `core/walk.py`). Tokens
+   with spaces, globs, ``::`` or no path separator are ignored.
+3. **API coverage**: every name in ``repro.sim.__all__`` (parsed from the
+   package ``__init__.py``, no imports) must appear in docs/SIMULATOR.md,
+   as must the current trace schema version string.
+
+Exit status 0 = clean; 1 = problems (all listed).
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_FILES = sorted(
+    [ROOT / "README.md", ROOT / "ROADMAP.md"] + list((ROOT / "docs").glob("*.md"))
+)
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_RE = re.compile(r"`([^`\n]+)`")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+PATH_TOKEN_RE = re.compile(r"^[A-Za-z0-9_.\-/]+$")
+PATH_SUFFIXES = (".py", ".md", ".sh", ".json")
+
+
+def github_slug(title: str) -> str:
+    """GitHub's auto-anchor for a heading (approximation: good enough for
+    ASCII headings; keeps word chars, hyphens and spaces)."""
+    s = title.strip().lower().replace("`", "")
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def headings_of(path: Path) -> set[str]:
+    return {github_slug(m) for m in HEADING_RE.findall(path.read_text())}
+
+
+def resolve_repo_path(token: str) -> bool:
+    token = token.rstrip("/")
+    for base in (ROOT, ROOT / "src", ROOT / "src" / "repro"):
+        if (base / token).exists():
+            return True
+    return False
+
+
+def check_links(path: Path, problems: list[str]) -> None:
+    text = path.read_text()
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        file_part, _, anchor = target.partition("#")
+        dest = path if not file_part else (path.parent / file_part).resolve()
+        if file_part and not dest.exists():
+            problems.append(f"{path.relative_to(ROOT)}: broken link -> {target}")
+            continue
+        if anchor and dest.suffix == ".md":
+            if anchor not in headings_of(dest):
+                problems.append(
+                    f"{path.relative_to(ROOT)}: missing anchor -> {target}")
+
+
+def check_code_paths(path: Path, problems: list[str]) -> None:
+    for token in CODE_RE.findall(path.read_text()):
+        if "/" not in token or not PATH_TOKEN_RE.fullmatch(token):
+            continue
+        if not (token.endswith(PATH_SUFFIXES) or token.endswith("/")):
+            continue
+        if not resolve_repo_path(token):
+            problems.append(
+                f"{path.relative_to(ROOT)}: dangling code path `{token}`")
+
+
+def check_sim_api_coverage(problems: list[str]) -> None:
+    init = ROOT / "src" / "repro" / "sim" / "__init__.py"
+    doc = ROOT / "docs" / "SIMULATOR.md"
+    if not doc.exists():
+        problems.append("docs/SIMULATOR.md missing")
+        return
+    names: list[str] = []
+    version = None
+    for node in ast.walk(ast.parse(init.read_text())):
+        if isinstance(node, ast.Assign) and any(
+                getattr(t, "id", "") == "__all__" for t in node.targets):
+            names = [ast.literal_eval(e) for e in node.value.elts]
+    for node in ast.walk(ast.parse(
+            (ROOT / "src" / "repro" / "sim" / "trace.py").read_text())):
+        if isinstance(node, ast.Assign) and any(
+                getattr(t, "id", "") == "TRACE_SCHEMA_VERSION"
+                for t in node.targets):
+            version = ast.literal_eval(node.value)
+    text = doc.read_text()
+    for name in names:
+        if name not in text:
+            problems.append(
+                f"docs/SIMULATOR.md: public repro.sim symbol {name!r} "
+                f"undocumented")
+    if version is None or f"TRACE_SCHEMA_VERSION = {version}" not in text:
+        problems.append(
+            f"docs/SIMULATOR.md: trace schema version {version} not stated")
+
+
+def main() -> int:
+    problems: list[str] = []
+    for path in DOC_FILES:
+        check_links(path, problems)
+        check_code_paths(path, problems)
+    check_sim_api_coverage(problems)
+    if problems:
+        print(f"docs_check: {len(problems)} problem(s)")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    print(f"docs_check: {len(DOC_FILES)} files clean "
+          f"(links, anchors, code paths, repro.sim API coverage)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
