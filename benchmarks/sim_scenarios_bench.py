@@ -1,7 +1,8 @@
 """Virtual-time simulator benchmark: event-engine throughput + the paper's
-partial-update claim under a wall-clock deadline + the fully-async cross.
+partial-update claim under a wall-clock deadline + the fully-async cross +
+the heap-vs-fleet timeline-engine scaling cross.
 
-Four measurements go to BENCH_sim_engine.json:
+Five measurements go to BENCH_sim_engine.json:
 
 1. *Parity anchor*: the uniform_sync scenario reproduces the synchronous
    flat engine bit-exactly (asserted, not timed) — the simulator's compute
@@ -19,6 +20,13 @@ Four measurements go to BENCH_sim_engine.json:
    bandwidth-limited wire) at identical seeds and timing for all three
    deadline policies, plus per-uplink queueing totals and the contention
    on/off virtual-time ratio.
+5. *Heap vs fleet timeline engines* at n in {10^3, 10^4, 10^5}: the same
+   million_walks walk plan (m = n/10 chains) timed through both engines —
+   bit-equality of the resulting timelines is asserted at every size, the
+   equal-workload speedup and each engine's native throughput (events/s
+   for the heap, chain-steps/s for the fleet) are recorded — plus one
+   end-to-end fleet_metro round at the largest n (implicit metro topology,
+   hierarchical queued links, churn, jax compute included).
 """
 from __future__ import annotations
 
@@ -30,11 +38,12 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core.walk import WalkPlan
+from repro.core.walk import WalkPlan, sample_walks
 from repro.sim import build_scenario
 
 ROUNDS = int(os.environ.get("REPRO_BENCH_ROUNDS", 40))
 N_DEV = 20
+FLEET_N_MAX = int(os.environ.get("REPRO_BENCH_FLEET_N", 100_000))
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_sim_engine.json")
 
 
@@ -157,15 +166,85 @@ def _congestion_cross() -> dict:
     return out
 
 
+def _engine_cross() -> dict:
+    """Heap vs fleet timeline engines on identical million_walks plans:
+    bit-equality asserted, equal-workload speedup measured. No jax compute —
+    this times the timeline machinery alone, which is exactly what the fleet
+    engine replaces."""
+    sizes = [s for s in (1_000, 10_000, 100_000) if s <= FLEET_N_MAX]
+    out = {"sizes": []}
+    for n in sizes:
+        setup = build_scenario("million_walks", n=n, seed=0)
+        heap = setup.runner(engine="heap")
+        fleet = setup.runner(engine="fleet")
+        m, k = setup.cfg.m_chains, setup.cfg.k_walk
+        plan = sample_walks(setup.topo, m, k, np.random.default_rng(7))
+        reps = 3
+        loop_h = loop_f = float("inf")
+        for _ in range(reps):
+            kd_h, ts_h, kill_h, ev_h, s = heap.simulate_walk_timing(
+                plan, 0.0, 1e9)
+            loop_h = min(loop_h, s)
+        for _ in range(reps):
+            kd_f, ts_f, kill_f, ev_f, s = fleet.simulate_walk_timing(
+                plan, 0.0, 1e9)
+            loop_f = min(loop_f, s)
+        np.testing.assert_array_equal(ts_h, ts_f)
+        np.testing.assert_array_equal(kd_h, kd_f)
+        np.testing.assert_array_equal(kill_h, kill_f)
+        assert ev_h == ev_f, (ev_h, ev_f)
+        out["sizes"].append({
+            "n": n, "chains": m, "steps": k, "events": int(ev_h),
+            "bit_exact": True,
+            "heap_loop_s": loop_h,
+            "fleet_loop_s": loop_f,
+            "heap_events_per_sec": ev_h / loop_h,
+            "fleet_chain_steps_per_sec": (m * k) / loop_f,
+            "equal_workload_speedup": loop_h / loop_f,
+        })
+    return out
+
+
+def _fleet_end_to_end() -> dict:
+    """One end-to-end fleet_metro run at the largest cross size: implicit
+    metro SparseTopology, hierarchical queued uplinks, churn, two-class
+    rates, 8-bit payloads, jax compute included."""
+    n = FLEET_N_MAX
+    setup = build_scenario("fleet_metro", n=n, seed=0, rounds=2)
+    runner = setup.runner()
+    t0 = time.time()
+    res = runner.run(setup.rounds, jax.random.PRNGKey(0),
+                     setup.x_test, setup.y_test, eval_every=setup.rounds)
+    wall = time.time() - t0
+    final = res.final()
+    return {
+        "n": n, "m_chains": setup.cfg.m_chains,
+        "k_walk": setup.cfg.k_walk, "rounds": setup.rounds,
+        "bits": setup.cfg.quant.bits,
+        "virtual_time_s": res.virtual_time_s,
+        "events_total": res.events_total,
+        "host_timeline_s": res.host_loop_s,
+        "wall_s": wall,
+        "final_accuracy": final["accuracy"],
+        "killed_chain_rounds": int(sum(
+            int(r.killed.sum()) for r in res.records)),
+        "truncated_chain_rounds": int(sum(
+            r.truncated_chains for r in res.records)),
+    }
+
+
 def run() -> None:
     report = {
-        "config": {"n": N_DEV, "rounds": ROUNDS,
-                   "scenarios": ["straggler_tail", "congested_uplink"],
+        "config": {"n": N_DEV, "rounds": ROUNDS, "fleet_n_max": FLEET_N_MAX,
+                   "scenarios": ["straggler_tail", "congested_uplink",
+                                 "million_walks", "fleet_metro"],
                    "backend": jax.default_backend()},
         "parity_anchor": _parity_anchor(),
         "event_engine": _event_throughput(),
         "partial_vs_drop": _policy_cross(),
         "congested_uplink": _congestion_cross(),
+        "engine_cross": _engine_cross(),
+        "fleet_end_to_end": _fleet_end_to_end(),
         "notes": (
             "straggler_tail: lognormal(sigma=1.25) device rates, deadline = "
             "K median-rate steps, complete graph, 2FNN on the synthetic "
@@ -187,11 +266,32 @@ def run() -> None:
             "overlap also wins on accuracy is the tight deadline of the "
             "overlap_async scenario (deadline at half a median walk, see "
             "examples/async_straggler_sim.py). events_per_sec times the "
-            "pure host event loop on a 512x32 synthetic timeline."
+            "pure host event loop on a 512x32 synthetic timeline. "
+            "engine_cross: the same million_walks plan (m = n/10 chains, "
+            "k = 8, uncontended links, lognormal rates, no churn) through "
+            "the heap and fleet timeline engines; timelines asserted "
+            "bit-equal at every n, equal_workload_speedup = heap loop "
+            "seconds / fleet loop seconds on the identical plan. "
+            "fleet_end_to_end: fleet_metro at the largest n — implicit "
+            "metro SparseTopology, hierarchical device->cell->metro->"
+            "backbone links with queued device uplinks, two-class rates, "
+            "churn, 8-bit payloads — run through the full round loop "
+            "including jax compute."
         ),
     }
     cross = report["partial_vs_drop"]
     cong = report["congested_uplink"]
+    eng = report["engine_cross"]["sizes"]
+    if eng:
+        top = eng[-1]
+        emit("sim_engine/fleet_speedup_at_max_n", 0.0,
+             f"{top['equal_workload_speedup']:.0f}x@n={top['n']}")
+        emit("sim_engine/fleet_chain_steps_per_sec",
+             1e6 / max(top["fleet_chain_steps_per_sec"], 1e-9),
+             f"{top['fleet_chain_steps_per_sec']:.0f}/s")
+    e2e = report["fleet_end_to_end"]
+    emit("sim_engine/fleet_end_to_end_wall_s", e2e["wall_s"],
+         f"{e2e['wall_s']:.1f}s n={e2e['n']} m={e2e['m_chains']}")
     emit("sim_engine/events_per_sec",
          1e6 / max(report["event_engine"]["events_per_sec"], 1e-9),
          f"{report['event_engine']['events_per_sec']:.0f}/s")

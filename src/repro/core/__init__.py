@@ -1,5 +1,6 @@
 """The paper's contribution: DFedRW / QDFedRW protocol core."""
-from repro.core.graph import Topology, make_topology
+from repro.core.graph import (
+    SparseTopology, Topology, make_sparse_topology, make_topology)
 from repro.core.walk import WalkPlan, sample_walks, StragglerModel
 from repro.core.quantization import QuantConfig, Quantized, quantize, dequantize
 from repro.core.flatten import FlatSpec, flatten_tree, make_flat_spec, unflatten_tree
@@ -8,7 +9,7 @@ from repro.core.baselines import BaselineConfig, FedAvg, DFedAvg, DSGD
 from repro.core.metrics import History, train_loop
 
 __all__ = [
-    "Topology", "make_topology",
+    "Topology", "make_topology", "SparseTopology", "make_sparse_topology",
     "WalkPlan", "sample_walks", "StragglerModel",
     "QuantConfig", "Quantized", "quantize", "dequantize",
     "FlatSpec", "flatten_tree", "make_flat_spec", "unflatten_tree",

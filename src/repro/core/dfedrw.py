@@ -563,6 +563,45 @@ class DFedRW:
                 agg_devices = np.concatenate([agg_devices, topo.n + np.arange(pad)])
                 rows = np.pad(rows, ((0, pad), (0, 0)))
                 weights = np.pad(weights, ((0, pad), (0, 0)))
+        elif getattr(topo, "transition", None) is None:
+            # Implicit SparseTopology: same aggregation law as the dense
+            # branch below (uniform aggregator draw; per aggregator a uniform
+            # random subset of <= n_agg participating neighbors in uniform
+            # random order; size-weights normalized over the selection; pads
+            # carry the aggregator's own id and zero weight) realized as one
+            # CSR gather + lexsort instead of a per-aggregator Python loop.
+            # RNG consumption differs from the dense branch — the two
+            # representations are distinct planners, not stream twins.
+            n_aggregators = max(1, int(round(topo.n * cfg.agg_fraction)))
+            agg_devices = rng.choice(topo.n, size=n_aggregators, replace=False)
+            n_agg = cfg.n_agg
+            deg = topo.degrees[agg_devices]
+            total = int(deg.sum())
+            starts = np.cumsum(deg) - deg
+            offs = np.arange(total, dtype=np.int64) - np.repeat(starts, deg)
+            flat = topo.indices[np.repeat(topo.indptr[agg_devices], deg) + offs]
+            row_id = np.repeat(np.arange(n_aggregators, dtype=np.int64), deg)
+            # The aggregator itself is always a candidate (include_self=True).
+            flat = np.concatenate([flat, agg_devices])
+            row_id = np.concatenate(
+                [row_id, np.arange(n_aggregators, dtype=np.int64)])
+            is_part = np.zeros(topo.n, dtype=bool)
+            is_part[participants] = True
+            keep = is_part[flat] | (flat == agg_devices[row_id])
+            flat, row_id = flat[keep], row_id[keep]
+            keys = rng.random(flat.shape[0])
+            order = np.lexsort((keys, row_id))
+            flat, row_id = flat[order], row_id[order]
+            row_start = np.searchsorted(row_id, np.arange(n_aggregators))
+            rank = np.arange(flat.shape[0], dtype=np.int64) - row_start[row_id]
+            sel = rank < n_agg
+            s_row, s_dev, s_rank = row_id[sel], flat[sel], rank[sel]
+            rows = np.tile(agg_devices[:, None], (1, n_agg))
+            weights = np.zeros((n_aggregators, n_agg), dtype=np.float64)
+            rows[s_row, s_rank] = s_dev
+            w_flat = sizes[s_dev].astype(np.float64)
+            wsum = np.bincount(s_row, weights=w_flat, minlength=n_aggregators)
+            weights[s_row, s_rank] = w_flat / np.maximum(wsum, 1.0)[s_row]
         else:
             n_aggregators = max(1, int(round(topo.n * cfg.agg_fraction)))
             agg_devices = rng.choice(topo.n, size=n_aggregators, replace=False)

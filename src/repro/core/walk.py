@@ -12,7 +12,7 @@ from __future__ import annotations
 import dataclasses
 import numpy as np
 
-from repro.core.graph import Topology
+from repro.core.graph import SparseTopology, Topology
 
 __all__ = [
     "WalkPlan",
@@ -167,7 +167,7 @@ class StragglerModel:
 
 
 def sample_walks(
-    topo: Topology,
+    topo: Topology | SparseTopology,
     m: int,
     k: int,
     rng: np.random.Generator,
@@ -177,23 +177,36 @@ def sample_walks(
     """Sample M MH random-walk chains of (variable) length <= K.
 
     Start devices are uniform over V (Alg. 1 line 3) unless given (the
-    large-scale LM experiment chains rounds: i_m^{t,0} = i_m^{t-1,last})."""
+    large-scale LM experiment chains rounds: i_m^{t,0} = i_m^{t-1,last}).
+
+    Accepts either representation: a dense :class:`Topology` steps by
+    inverse-CDF over cached transition rows (RNG-stream-identical to the
+    original per-call ``np.cumsum`` path), an implicit
+    :class:`SparseTopology` steps via its generative proposal/acceptance
+    kernel (same chain law, different — but deterministic — stream)."""
     if start_devices is None:
         start = rng.integers(0, topo.n, size=m)
     else:
         start = np.asarray(start_devices, dtype=np.int64) % topo.n
     devices = np.zeros((m, k), dtype=np.int32)
     n = topo.n
-    cdf = np.cumsum(topo.transition, axis=1)
-    # All M chains advance together: one uniform draw per step, one
-    # inverse-CDF lookup on the M gathered kernel rows (vectorized
-    # searchsorted: count of cdf entries <= u, which includes the
-    # self-loop mass).
     cur = start.astype(np.int64)
-    for step in range(k):
-        devices[:, step] = cur
-        u = rng.random(m)
-        cur = np.minimum((cdf[cur] <= u[:, None]).sum(axis=1), n - 1)
+    if getattr(topo, "transition", None) is None:
+        # Implicit SparseTopology: generative MH kernel, no CDF rows to
+        # gather — one vectorized proposal/acceptance step for all M chains.
+        for step in range(k):
+            devices[:, step] = cur
+            cur = topo.sample_next(cur, rng)
+    else:
+        cdf = topo.transition_cdf
+        # All M chains advance together: one uniform draw per step, one
+        # inverse-CDF lookup on the M gathered kernel rows (vectorized
+        # searchsorted: count of cdf entries <= u, which includes the
+        # self-loop mass).
+        for step in range(k):
+            devices[:, step] = cur
+            u = rng.random(m)
+            cur = np.minimum((cdf[cur] <= u[:, None]).sum(axis=1), n - 1)
     k_m = (
         straggler.chain_lengths(devices, k, topo.n)
         if straggler is not None

@@ -17,6 +17,8 @@ Examples:
   PYTHONPATH=src python -m repro.launch.sim --scenario straggler_tail \\
       --record trace.jsonl
   PYTHONPATH=src python -m repro.launch.sim --replay trace.jsonl
+  PYTHONPATH=src python -m repro.launch.sim --scenario fleet_metro \\
+      --engine fleet --n 100000 --rounds 2
 """
 from __future__ import annotations
 
@@ -46,8 +48,13 @@ def main(argv=None) -> None:
                     help="list registered scenarios and exit")
     ap.add_argument("--rounds", type=int, default=0,
                     help="0 = the scenario's default")
-    ap.add_argument("--devices", type=int, default=20)
+    ap.add_argument("--devices", "--n", dest="devices", type=int, default=20,
+                    help="fleet size (--n is an alias)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", default="", choices=["", "heap", "fleet"],
+                    help="timeline engine override: 'heap' is the per-event "
+                         "oracle, 'fleet' the vectorized batched-timeline "
+                         "backend for large --n ('' = scenario default)")
     ap.add_argument("--policy", default="",
                     choices=["", "partial", "drop", "overlap"],
                     help="deadline policy override (scenarios default to "
@@ -111,10 +118,10 @@ def main(argv=None) -> None:
         overrides["rounds"] = args.rounds
     setup = build_scenario(args.scenario, n=args.devices, seed=args.seed,
                            **overrides)
-    runner = setup.runner()
+    runner = setup.runner(engine=args.engine or None)
     print(f"scenario={setup.name} n={args.devices} rounds={setup.rounds} "
-          f"policy={setup.sim.policy} deadline_s={setup.sim.deadline_s} "
-          f"bits={setup.cfg.quant.bits}")
+          f"engine={runner.timeline_engine} policy={setup.sim.policy} "
+          f"deadline_s={setup.sim.deadline_s} bits={setup.cfg.quant.bits}")
 
     result = runner.run(setup.rounds, jax.random.PRNGKey(args.seed),
                         setup.x_test, setup.y_test,

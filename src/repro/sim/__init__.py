@@ -11,10 +11,20 @@ window (see runner.py for why that is bit-exact). Shared-uplink contention
 trace.py records runs as versioned JSONL timelines that replay bit-exactly.
 scenarios.py is the declarative registry the launcher (repro.launch.sim),
 benchmarks and tests share. docs/SIMULATOR.md is the full reference.
+
+Two timeline engines share this window protocol: the per-event heap loop
+(runner.py, the bit-exact oracle) and the vectorized fleet backend
+(fleet.py, ``SimConfig(engine="fleet")``) that advances all chains as
+batched array sweeps — at fleet scale pair it with implicit
+``core.graph.SparseTopology`` graphs and the tiered hierarchy.py link
+model.
 """
 from repro.sim.devices import DeviceFleet, DeviceModelConfig
 from repro.sim.events import Event, EventQueue, UplinkQueue, UplinkStats
-from repro.sim.links import LinkModel, LinkModelConfig, segment_wire_bits
+from repro.sim.fleet import FleetDFedRW
+from repro.sim.hierarchy import HierarchicalLinkModel, HierLinkConfig
+from repro.sim.links import (
+    LinkModel, LinkModelConfig, make_link_model, segment_wire_bits)
 from repro.sim.runner import AsyncDFedRW, SimConfig, SimResult, SimRoundRecord
 from repro.sim.scenarios import (
     SCENARIOS,
@@ -36,8 +46,9 @@ from repro.sim.trace import (
 __all__ = [
     "Event", "EventQueue", "UplinkQueue", "UplinkStats",
     "DeviceFleet", "DeviceModelConfig",
-    "LinkModel", "LinkModelConfig", "segment_wire_bits",
-    "AsyncDFedRW", "SimConfig", "SimResult", "SimRoundRecord",
+    "LinkModel", "LinkModelConfig", "segment_wire_bits", "make_link_model",
+    "HierLinkConfig", "HierarchicalLinkModel",
+    "AsyncDFedRW", "SimConfig", "SimResult", "SimRoundRecord", "FleetDFedRW",
     "SCENARIOS", "SimScenario", "SimSetup", "build_scenario", "get_scenario",
     "list_scenarios", "partitioned_topology", "register_scenario",
     "TRACE_SCHEMA", "TRACE_SCHEMA_VERSION", "SimTrace", "WindowTrace",

@@ -32,7 +32,8 @@ from repro.core.flatten import FlatSpec
 from repro.core.quantization import wire_bits
 from repro.sim.events import UplinkQueue, UplinkStats
 
-__all__ = ["LinkModelConfig", "LinkModel", "segment_wire_bits"]
+__all__ = ["LinkModelConfig", "LinkModel", "segment_wire_bits",
+           "make_link_model"]
 
 
 def segment_wire_bits(spec: FlatSpec, bits: int) -> int:
@@ -124,9 +125,49 @@ class LinkModel:
         _, t_done = self.uplinks.enqueue(src, t_ready, service)
         return t_done
 
+    def transfer_time_batch(self, src: np.ndarray, dst: np.ndarray,
+                            payload_bits: float) -> np.ndarray:
+        """Vectorized jitter-free ``transfer_time`` over parallel (src, dst)
+        vectors (float-identical to the scalar path: the price is the same
+        two f64 operations per message). Requires ``jitter_sigma == 0`` —
+        jitter draws are ordered by event processing, which a batched price
+        cannot reproduce."""
+        if self.cfg.jitter_sigma > 0.0:
+            raise ValueError(
+                "transfer_time_batch requires jitter_sigma == 0 (per-message "
+                "jitter draw order is event-serial)")
+        src = np.asarray(src)
+        dst = np.asarray(dst)
+        t = self.cfg.latency_s
+        if math.isfinite(self.cfg.bandwidth_bps):
+            t = t + payload_bits / self.cfg.bandwidth_bps
+        return np.where(src == dst, 0.0, t)
+
+    def min_transfer_time(self, payload_bits: float) -> float:
+        """Smallest possible cross-device price — the link contribution to
+        the fleet engine's bucket width."""
+        t = self.cfg.latency_s
+        if math.isfinite(self.cfg.bandwidth_bps):
+            t += payload_bits / self.cfg.bandwidth_bps
+        return t
+
     def uplink_stats(self, device: int) -> UplinkStats | None:
         """Contention accounting for one sender (None when queue=False or
         the device never sent)."""
         if self.uplinks is None:
             return None
         return self.uplinks.stats.get(device)
+
+
+def make_link_model(cfg):
+    """Dispatch a link config to its model class: plain
+    :class:`LinkModelConfig` to the uniform all-pairs :class:`LinkModel`,
+    ``repro.sim.hierarchy.HierLinkConfig`` to the tiered
+    :class:`repro.sim.hierarchy.HierarchicalLinkModel` (imported lazily to
+    keep the module dependency one-way)."""
+    if isinstance(cfg, LinkModelConfig):
+        return LinkModel(cfg)
+    from repro.sim.hierarchy import HierLinkConfig, HierarchicalLinkModel
+    if isinstance(cfg, HierLinkConfig):
+        return HierarchicalLinkModel(cfg)
+    raise TypeError(f"make_link_model: unknown link config {type(cfg)!r}")

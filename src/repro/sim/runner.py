@@ -92,12 +92,14 @@ from repro.data.synthetic import FederatedDataset
 from repro.models.fnn import SmallModel
 from repro.sim.devices import DeviceFleet, DeviceModelConfig
 from repro.sim.events import Event, EventQueue
-from repro.sim.links import LinkModel, LinkModelConfig, segment_wire_bits
+from repro.sim.hierarchy import HierLinkConfig
+from repro.sim.links import LinkModelConfig, make_link_model, segment_wire_bits
 from repro.sim.trace import SimTrace, WindowTrace, make_header
 
 __all__ = ["SimConfig", "SimRoundRecord", "SimResult", "AsyncDFedRW"]
 
 _POLICIES = ("partial", "drop", "overlap")
+_ENGINES = ("heap", "fleet")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,7 +108,13 @@ class SimConfig:
 
     ``deadline_s`` is the aggregation-trigger period (None = the synchronous
     barrier: wait for every chain); ``policy`` picks what happens to chains
-    the trigger cuts — see the module docstring.
+    the trigger cuts — see the module docstring. ``engine`` selects the
+    timeline implementation: ``"heap"`` is this module's per-event reference
+    loop, ``"fleet"`` the vectorized window-bucketing backend of
+    ``repro.sim.fleet`` (construct a ``FleetDFedRW`` — or let
+    ``SimSetup.runner()`` dispatch — to use it). ``links`` accepts either
+    the uniform :class:`repro.sim.links.LinkModelConfig` or the tiered
+    :class:`repro.sim.hierarchy.HierLinkConfig`.
 
     >>> SimConfig().policy, SimConfig().deadline_s   # barrier + paper policy
     ('partial', None)
@@ -115,10 +123,12 @@ class SimConfig:
     """
 
     devices: DeviceModelConfig = dataclasses.field(default_factory=DeviceModelConfig)
-    links: LinkModelConfig = dataclasses.field(default_factory=LinkModelConfig)
+    links: LinkModelConfig | HierLinkConfig = dataclasses.field(
+        default_factory=LinkModelConfig)
     deadline_s: float | None = None   # aggregation trigger period; None = the
                                       # synchronous barrier (wait for all chains)
     policy: str = "partial"           # "partial" | "drop" | "overlap"
+    engine: str = "heap"              # "heap" | "fleet"
 
 
 @dataclasses.dataclass
@@ -224,6 +234,10 @@ class AsyncDFedRW:
     2.0
     """
 
+    # which SimConfig.engine this class implements (the vectorized subclass
+    # repro.sim.fleet.FleetDFedRW overrides it)
+    timeline_engine = "heap"
+
     def __init__(
         self,
         model: SmallModel,
@@ -235,6 +249,13 @@ class AsyncDFedRW:
     ):
         assert cfg.engine == "flat", "the simulator batches into the flat engine"
         assert sim.policy in _POLICIES, sim.policy
+        assert sim.engine in _ENGINES, sim.engine
+        if sim.engine != self.timeline_engine:
+            raise TypeError(
+                f"SimConfig(engine={sim.engine!r}) but this class implements "
+                f"{self.timeline_engine!r} — construct "
+                "repro.sim.fleet.FleetDFedRW for the vectorized backend (or "
+                "let SimSetup.runner() dispatch on the config)")
         if sim.policy == "overlap" and cfg.chain_mode:
             raise NotImplementedError(
                 "chain_mode chains already persist across rounds; overlap "
@@ -242,7 +263,7 @@ class AsyncDFedRW:
         self.engine = DFedRW(model, data, topo, cfg)
         self.sim = sim
         self.fleet = DeviceFleet(topo.n, sim.devices)
-        self.link = LinkModel(sim.links)
+        self.link = make_link_model(sim.links)
         self.hop_bits = segment_wire_bits(self.engine.flat_spec, cfg.quant.bits)
         self.queue = EventQueue()
         self.t = 0.0
@@ -263,6 +284,37 @@ class AsyncDFedRW:
         return topo
 
     # ------------------------------------------------------------ timeline
+    # The four hooks below are the whole timeline-backend surface: the
+    # vectorized fleet engine (repro.sim.fleet) overrides them (plus
+    # _fill_slots/_window_view/_agg_latency/_drop_down_aggregators/
+    # _reset_timeline) while run_round stays this class's single shared
+    # implementation of the window protocol.
+    def _clear_board(self, t0: float) -> None:
+        """Drop all chain slots and pending events (lockstep policies clear
+        the board at every trigger; uplink busy-state deliberately persists
+        — a contended transmit queue outlives the window that filled it)."""
+        self._slots = [None] * self.engine.cfg.m_chains
+        self.queue.clear(now=t0)
+
+    def _advance_window(self, deadline: float) -> tuple[int, float]:
+        """Advance the timeline to ``deadline`` (inclusive); returns
+        (events dispatched, host seconds spent)."""
+        t_host = _time.perf_counter()
+        events = self.queue.drain(
+            lambda ev: self._handle_event(self._slots, ev), until=deadline)
+        return events, _time.perf_counter() - t_host
+
+    def _timeline_now(self) -> float:
+        """Latest instant the timeline has advanced to."""
+        return self.queue.now
+
+    def _release_slots(self, overlap: bool) -> None:
+        """Free finished/killed slots after a trigger; live overlap chains
+        keep their slot (and their pending event)."""
+        for mi, slot in enumerate(self._slots):
+            if not overlap or slot.killed or slot.k_done >= slot.k_m:
+                self._slots[mi] = None
+
     def _handle_event(self, slots: list, ev: Event) -> None:
         """One event of the walk timeline (shared by run_round and the
         standalone timing probe). Freed slots never have pending events —
@@ -475,14 +527,10 @@ class AsyncDFedRW:
         if not overlap:
             # lockstep policies: every trigger clears the board — fresh
             # chains each window, no events carried over
-            self._slots = [None] * self.engine.cfg.m_chains
-            self.queue.clear(now=t0)
+            self._clear_board(t0)
         self._fill_slots(state, topo, t0)
         deadline = math.inf if sim.deadline_s is None else t0 + sim.deadline_s
-        t_host = _time.perf_counter()
-        events = self.queue.drain(
-            lambda ev: self._handle_event(self._slots, ev), until=deadline)
-        loop_s = _time.perf_counter() - t_host
+        events, loop_s = self._advance_window(deadline)
 
         (w_dev, w_mask, w_bidx, w_ts, k_planned, killed, finished,
          resume) = self._window_view(math.isfinite(deadline))
@@ -499,10 +547,11 @@ class AsyncDFedRW:
             exec_plan = win_plan
         agg = self.engine.plan_aggregation(exec_plan, topo=topo)
         if self.fleet.cfg.has_churn:
-            t_trigger = deadline if math.isfinite(deadline) else self.queue.now
+            t_trigger = (deadline if math.isfinite(deadline)
+                         else self._timeline_now())
             agg = self._drop_down_aggregators(agg, t_trigger)
         t_compute_end = deadline if math.isfinite(deadline) else max(
-            self.queue.now, t0)
+            self._timeline_now(), t0)
         agg_lat = self._agg_latency(agg, topo.n, t_compute_end)
         self.t = t_compute_end + agg_lat
         new_state, metrics = self.engine.execute_round(
@@ -524,9 +573,7 @@ class AsyncDFedRW:
                 timestamps=w_ts, bidx=w_bidx, agg_devices=agg[0],
                 agg_rows=agg[1], agg_weights=agg[2]))
         # free finished/killed slots; live chains carry their pending event
-        for mi, slot in enumerate(self._slots):
-            if not overlap or slot.killed or slot.k_done >= slot.k_m:
-                self._slots[mi] = None
+        self._release_slots(overlap)
         return new_state, metrics, record
 
     def _drop_down_aggregators(self, agg: tuple, t: float) -> tuple:

@@ -17,8 +17,9 @@ crosses, partition-then-heal topologies, device churn mid-walk, chains
 overlapping aggregation triggers, and shared-uplink congestion.
 
 >>> sorted(list_scenarios()) # doctest: +NORMALIZE_WHITESPACE
-['churn_dropout', 'congested_uplink', 'dirichlet_deadline', 'overlap_async',
- 'partition_heal', 'straggler_tail', 'uniform_sync']
+['churn_dropout', 'congested_uplink', 'dirichlet_deadline', 'fleet_metro',
+ 'million_walks', 'overlap_async', 'partition_heal', 'straggler_tail',
+ 'uniform_sync']
 >>> get_scenario("overlap_async").build.__name__
 '_overlap_async'
 """
@@ -31,8 +32,10 @@ import numpy as np
 
 from repro.core.dfedrw import DFedRWConfig
 from repro.core.graph import (
+    SparseTopology,
     Topology,
     lambda_p,
+    make_sparse_topology,
     make_topology,
     metropolis_hastings_matrix,
     _with_self_loops,
@@ -42,6 +45,8 @@ from repro.core.quantization import QuantConfig
 from repro.data.synthetic import FederatedDataset, synthetic_image_classification
 from repro.models.fnn import make_fnn
 from repro.sim.devices import DeviceModelConfig
+from repro.sim.fleet import FleetDFedRW
+from repro.sim.hierarchy import HierLinkConfig
 from repro.sim.links import LinkModelConfig
 from repro.sim.runner import AsyncDFedRW, SimConfig
 
@@ -64,7 +69,7 @@ class SimSetup:
     name: str
     model: Any
     data: FederatedDataset
-    topo: Topology
+    topo: Topology | SparseTopology
     cfg: DFedRWConfig
     sim: SimConfig
     x_test: np.ndarray
@@ -72,9 +77,16 @@ class SimSetup:
     rounds: int = 40
     topology_schedule: list | None = None
 
-    def runner(self) -> AsyncDFedRW:
-        return AsyncDFedRW(self.model, self.data, self.topo, self.cfg,
-                           self.sim, topology_schedule=self.topology_schedule)
+    def runner(self, engine: str | None = None) -> AsyncDFedRW:
+        """Instantiate the runner for ``sim.engine`` (or an explicit
+        override): ``"heap"`` is the per-event oracle loop, ``"fleet"`` the
+        vectorized batched-timeline backend for large n."""
+        sim = self.sim
+        if engine is not None and engine != sim.engine:
+            sim = dataclasses.replace(sim, engine=engine)
+        cls = FleetDFedRW if sim.engine == "fleet" else AsyncDFedRW
+        return cls(self.model, self.data, self.topo, self.cfg,
+                   sim, topology_schedule=self.topology_schedule)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -312,4 +324,90 @@ def _churn_dropout(n: int = 20, seed: int = 0, policy: str = "partial",
                     policy=policy, **kw)
     return SimSetup(name="churn_dropout", model=make_fnn((100,)), data=data,
                     topo=make_topology("complete", n), cfg=cfg, sim=sim,
+                    x_test=xt, y_test=yt, rounds=rounds)
+
+
+# ---------------------------------------------------------- fleet scenarios
+
+
+def _fleet_data(n: int, n_shards: int = 128, per_shard: int = 8):
+    """Pooled-shard partition for fleet-scale n: the sample pool is O(shards),
+    not O(n) — client c trains on shard ``c % n_shards`` — so a 10^5-device
+    dataset costs the same memory as a 10^2-device one. 8x8 images keep the
+    flat model dimension (and the (n, d_pad) device-parameter matrix) small
+    enough to replicate across the whole fleet."""
+    x, y = synthetic_image_classification(
+        n_samples=n_shards * per_shard, image_shape=(8, 8), seed=0, noise=1.0)
+    xt, yt = synthetic_image_classification(
+        n_samples=256, image_shape=(8, 8), seed=1, noise=1.0)
+    shard = np.arange(n_shards * per_shard, dtype=np.int64).reshape(
+        n_shards, per_shard)
+    client_idx = shard[np.arange(n, dtype=np.int64) % n_shards]
+    data = FederatedDataset(x=x, y=y, client_idx=client_idx,
+                            client_mask=np.ones_like(client_idx, dtype=bool),
+                            n_clients=n)
+    return data, xt, yt
+
+
+@register_scenario(
+    "fleet_metro",
+    "fleet-scale cellular deployment on the vectorized engine: implicit "
+    "metro SparseTopology (no materialized P), hierarchical "
+    "device->cell->metro->backbone links with queued device uplinks, "
+    "two-class device rates, slow churn — m_chains scales with n (n/10), "
+    "aggregator count capped at 64 absolute")
+def _fleet_metro(n: int = 20, seed: int = 0, bits: int = 8,
+                 m_chains: int | None = None, k_walk: int = 8,
+                 policy: str = "partial", queue: bool = True,
+                 deadline_factor: float = 4.0, devices_per_cell: int = 100,
+                 cells_per_metro: int = 32, rounds: int = 3,
+                 **kw) -> SimSetup:
+    data, xt, yt = _fleet_data(n)
+    m = max(2, n // 10) if m_chains is None else m_chains
+    # agg_fraction: 25% of a small fleet, but an absolute cap of 64
+    # aggregators at scale — a 10^5-device round should not fan in to 25 000
+    # collection points.
+    cfg = DFedRWConfig(m_chains=m, k_walk=k_walk, batch_size=8,
+                       agg_fraction=min(0.25, 64.0 / n), n_agg=4,
+                       quant=QuantConfig(bits=bits), seed=seed)
+    dev = DeviceModelConfig(rate_dist="two_class", slow_fraction=0.1,
+                            slowdown=4.0, base_step_time=0.5,
+                            mean_up_s=600.0, mean_down_s=60.0, seed=seed)
+    links = HierLinkConfig(devices_per_cell=devices_per_cell,
+                           cells_per_metro=cells_per_metro,
+                           queue=queue, seed=seed)
+    sim = SimConfig(engine="fleet", devices=dev, links=links,
+                    deadline_s=deadline_factor * cfg.k_walk * dev.base_step_time,
+                    policy=policy, **kw)
+    topo = make_sparse_topology("metro", n, devices_per_cell=devices_per_cell,
+                                cells_per_metro=cells_per_metro, seed=seed)
+    return SimSetup(name="fleet_metro", model=make_fnn((8,), in_dim=64),
+                    data=data, topo=topo, cfg=cfg, sim=sim,
+                    x_test=xt, y_test=yt, rounds=rounds)
+
+
+@register_scenario(
+    "million_walks",
+    "pure timeline stress for the fleet engine: implicit expander "
+    "SparseTopology, uncontended uniform links, lognormal rates, no churn "
+    "— the cheapest configuration that still exercises hop/SGD/transfer "
+    "timelines, sized for n up to 10^6 with m_chains = n/10")
+def _million_walks(n: int = 20, seed: int = 0, m_chains: int | None = None,
+                   k_walk: int = 8, rate_sigma: float = 0.5,
+                   deadline_factor: float = 3.0, bits: int = 8,
+                   rounds: int = 2, **kw) -> SimSetup:
+    data, xt, yt = _fleet_data(n)
+    m = max(2, n // 10) if m_chains is None else m_chains
+    cfg = DFedRWConfig(m_chains=m, k_walk=k_walk, batch_size=8,
+                       agg_fraction=min(0.25, 64.0 / n), n_agg=4,
+                       quant=QuantConfig(bits=bits), seed=seed)
+    dev = DeviceModelConfig(rate_dist="lognormal", rate_sigma=rate_sigma,
+                            base_step_time=0.5, seed=seed)
+    sim = SimConfig(engine="fleet", devices=dev,
+                    links=LinkModelConfig(latency_s=0.01, bandwidth_bps=20e6),
+                    deadline_s=deadline_factor * cfg.k_walk * dev.base_step_time,
+                    policy="partial", **kw)
+    topo = make_sparse_topology("expander3", n, seed=seed)
+    return SimSetup(name="million_walks", model=make_fnn((8,), in_dim=64),
+                    data=data, topo=topo, cfg=cfg, sim=sim,
                     x_test=xt, y_test=yt, rounds=rounds)

@@ -5,9 +5,12 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.graph import (
+    DENSE_EIG_LIMIT,
     complete_graph,
     expander_graph,
     lambda_p,
+    lambda_p_power,
+    make_sparse_topology,
     make_topology,
     metropolis_hastings_matrix,
     mixing_time,
@@ -16,6 +19,7 @@ from repro.core.graph import (
 
 
 TOPOLOGIES = ["complete", "ring", "expander3", "expander5", "star", "erdos_renyi"]
+SPARSE_NAMES = ["ring", "expander3", "expander5", "metro"]
 
 
 @pytest.mark.parametrize("name", TOPOLOGIES)
@@ -116,3 +120,103 @@ def test_is_connected_detects_components():
     adj[1, 2] = adj[2, 1] = True
     assert is_connected(adj)
     assert is_connected(np.ones((1, 1), dtype=bool))
+
+
+# --------------------------------------------- CSR + implicit sparse topology
+
+
+@pytest.mark.parametrize("name", TOPOLOGIES)
+def test_csr_neighbors_match_dense(name):
+    topo = make_topology(name, 17)
+    for i in range(topo.n):
+        dense = np.where(topo.adjacency[i] & ~np.eye(topo.n, dtype=bool)[i])[0]
+        np.testing.assert_array_equal(topo.neighbors(i), dense)
+        with_self = np.where(topo.adjacency[i])[0]
+        np.testing.assert_array_equal(topo.neighbors(i, include_self=True),
+                                      with_self)
+
+
+@pytest.mark.parametrize("name", SPARSE_NAMES)
+def test_sparse_topology_structure(name):
+    topo = make_sparse_topology(name, 48, seed=0)
+    assert topo.n == 48
+    assert (topo.degrees >= 1).all()
+    # symmetric edge set: every (i, j) has its (j, i)
+    edges = set()
+    for i in range(topo.n):
+        for j in topo.neighbors(i):
+            assert j != i
+            edges.add((i, int(j)))
+    assert all((j, i) in edges for (i, j) in edges)
+    # include_self inserts i in sorted position
+    nb = topo.neighbors(3, include_self=True)
+    assert 3 in nb.tolist() and (np.diff(nb) > 0).all()
+
+
+def test_sparse_sample_next_matches_dense_mh_law():
+    """The generative proposal/acceptance kernel realizes the same MH
+    chain law as the dense Eq. 7 matrix: empirical next-hop frequencies
+    from one state match the dense P row."""
+    n = 12
+    topo_s = make_sparse_topology("ring", n, lazy=0.1)
+    adj = ring_graph(n)
+    P = metropolis_hastings_matrix(adj, lazy=0.1)
+    rng = np.random.default_rng(0)
+    draws = 60_000
+    cur = np.full(draws, 4, dtype=np.int64)
+    nxt = topo_s.sample_next(cur, rng)
+    freq = np.bincount(nxt, minlength=n) / draws
+    np.testing.assert_allclose(freq, P[4], atol=0.01)
+
+
+def test_sparse_mh_matvec_and_lambda_estimate():
+    """mh_matvec is the implicit P @ x; its power-iteration lambda estimate
+    agrees with the dense eigendecomposition."""
+    n = 40
+    topo_s = make_sparse_topology("expander3", n, seed=2)
+    # dense twin built from the same CSR
+    P = np.zeros((n, n))
+    for i in range(n):
+        for j in topo_s.neighbors(i):
+            P[i, j] = (1.0 - topo_s.lazy) * min(1.0 / topo_s.degree(i),
+                                                1.0 / topo_s.degree(int(j)))
+    np.fill_diagonal(P, 1.0 - P.sum(axis=1))
+    x = np.random.default_rng(3).normal(size=n)
+    np.testing.assert_allclose(topo_s.mh_matvec(x), P @ x, atol=1e-12)
+    np.testing.assert_allclose(P.sum(axis=1), 1.0, atol=1e-12)
+    assert abs(topo_s.lambda_p_estimate() - lambda_p(P)) < 1e-3
+
+
+def test_dense_eig_guard_and_power_fallback():
+    """Above DENSE_EIG_LIMIT the dense eigendecomposition refuses with a
+    pointer at the power iteration; the power path agrees with the dense
+    one where both run."""
+    P = metropolis_hastings_matrix(expander_graph(30, 3))
+    assert abs(lambda_p_power(P) - lambda_p(P)) < 1e-6
+    with pytest.raises(ValueError, match="power"):
+        lambda_p(P, dense_limit=10)
+    t_dense = mixing_time(P, method="dense")
+    t_power = mixing_time(P, method="power")
+    assert abs(t_dense - t_power) <= 1
+    with pytest.raises(ValueError, match="power"):
+        mixing_time(P, dense_limit=10)
+    assert DENSE_EIG_LIMIT >= 1024
+
+
+def test_metro_builder_connected_and_bounded_degree():
+    topo = make_sparse_topology("metro", 700, devices_per_cell=50,
+                                cells_per_metro=4, seed=1)
+    assert int(topo.degrees.max()) <= 12
+    # BFS connectivity over the CSR
+    seen = np.zeros(topo.n, dtype=bool)
+    frontier = [0]
+    seen[0] = True
+    while frontier:
+        nxt = []
+        for i in frontier:
+            for j in topo.neighbors(i):
+                if not seen[j]:
+                    seen[j] = True
+                    nxt.append(int(j))
+        frontier = nxt
+    assert seen.all()

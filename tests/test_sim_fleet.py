@@ -1,0 +1,271 @@
+"""Fleet timeline engine: heap-vs-fleet parity, bucketing properties,
+vectorized churn exactness, sparse planning, engine dispatch.
+
+The fleet engine (repro.sim.fleet.FleetDFedRW) replaces the per-event heap
+walk with batched array sweeps; its contract is *bit-exactness* against the
+heap oracle on every configuration both engines accept. The parity tests
+here run full rounds (jax compute included) at n=20 across the simulator's
+behavioural axes — deadlines, drop/partial/overlap policies, churn, FIFO
+uplink contention, quantized payloads, hierarchical links — and assert the
+resulting SimResults are identical field by field.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.dfedrw import DFedRWConfig
+from repro.core.graph import make_sparse_topology, make_topology
+from repro.core.quantization import QuantConfig
+from repro.core.walk import sample_walks
+from repro.data.synthetic import FederatedDataset, synthetic_image_classification
+from repro.models.fnn import make_fnn
+from repro.sim import (
+    AsyncDFedRW,
+    DeviceModelConfig,
+    FleetDFedRW,
+    HierLinkConfig,
+    LinkModelConfig,
+    SimConfig,
+    build_scenario,
+    make_link_model,
+)
+from repro.sim.devices import DeviceFleet
+from repro.sim.hierarchy import HierarchicalLinkModel
+from repro.sim.links import LinkModel
+
+
+# ------------------------------------------------------------ full-run parity
+
+# (scenario, build overrides): one configuration per behavioural axis.
+PARITY_CONFIGS = {
+    "uniform_barrier": ("uniform_sync", {}),
+    "straggler_partial": ("straggler_tail", {"policy": "partial"}),
+    "straggler_drop": ("straggler_tail", {"policy": "drop"}),
+    "churn": ("churn_dropout", {}),
+    "congested_overlap": ("congested_uplink", {}),
+    "congested_quant8": ("congested_uplink", {"bits": 8}),
+    "hier_noqueue": ("fleet_metro", {"queue": False}),
+    "hier_queue_churn_overlap": ("fleet_metro", {"policy": "overlap"}),
+}
+
+_RECORD_FIELDS = ("t_start", "t_compute_end", "t_end", "k_planned", "k_done",
+                  "k_exec", "killed", "events", "agg_latency_s", "resumed")
+
+
+def _run_both(scenario: str, overrides: dict, n: int = 20, rounds: int = 2,
+              seed: int = 3):
+    out = []
+    for engine in ("heap", "fleet"):
+        setup = build_scenario(scenario, n=n, seed=seed, **overrides)
+        runner = setup.runner(engine=engine)
+        res = runner.run(rounds, jax.random.PRNGKey(1),
+                         setup.x_test, setup.y_test, eval_every=rounds)
+        out.append((runner, res))
+    return out
+
+
+@pytest.mark.parametrize("name", sorted(PARITY_CONFIGS))
+def test_full_run_parity(name):
+    """Identical SimResult from both engines: params bit-equal, every round
+    record field equal, event counts equal."""
+    scenario, overrides = PARITY_CONFIGS[name]
+    (heap, a), (fleet, b) = _run_both(scenario, overrides)
+    assert a.virtual_time_s == b.virtual_time_s
+    assert a.events_total == b.events_total
+    np.testing.assert_array_equal(np.asarray(a.state.device_params),
+                                  np.asarray(b.state.device_params))
+    for ra, rb in zip(a.records, b.records):
+        for f in _RECORD_FIELDS:
+            va, vb = getattr(ra, f), getattr(rb, f)
+            assert np.array_equal(np.asarray(va), np.asarray(vb)), (name, f)
+    # Queued-uplink contention accounting must agree per device.
+    if heap.link.uplinks is not None:
+        for dev, sh in heap.link.uplinks.stats.items():
+            sf = fleet.uplink_stats(dev)
+            assert sf is not None, dev
+            assert sh.sent == sf.sent
+            assert sh.busy_s == sf.busy_s
+            assert sh.queued_s == sf.queued_s
+            assert sh.t_first_start == sf.t_first_start
+            assert sh.t_last_done == sf.t_last_done
+    # Hierarchical links: per-tier message counts must agree (busy_s may
+    # differ by float association — the fleet accumulates per-window).
+    if isinstance(heap.link, HierarchicalLinkModel):
+        for tier, sh in heap.link.tier_stats.items():
+            assert sh.sent == fleet.link.tier_stats[tier].sent, tier
+
+
+# -------------------------------------------------- timing-parity properties
+
+
+def _pooled_data(n: int) -> FederatedDataset:
+    x, y = synthetic_image_classification(n_samples=64, image_shape=(8, 8),
+                                          seed=0, noise=1.0)
+    idx = np.arange(64, dtype=np.int64).reshape(16, 4)
+    client_idx = idx[np.arange(n, dtype=np.int64) % 16]
+    return FederatedDataset(x=x, y=y, client_idx=client_idx,
+                            client_mask=np.ones_like(client_idx, dtype=bool),
+                            n_clients=n)
+
+
+def _make_pair(n, seed, *, queue=False, churn=False, hier=False):
+    cfg = DFedRWConfig(m_chains=1, k_walk=1, batch_size=4,
+                       quant=QuantConfig(bits=8), seed=seed)
+    dev = DeviceModelConfig(rate_dist="lognormal", rate_sigma=0.8,
+                            base_step_time=1.0, seed=seed,
+                            mean_up_s=(9.0 if churn else np.inf),
+                            mean_down_s=(3.0 if churn else 0.0))
+    if hier:
+        links = HierLinkConfig(devices_per_cell=4, cells_per_metro=2,
+                               up_bps=2e5, down_bps=1e6, queue=queue)
+    else:
+        links = LinkModelConfig(latency_s=0.05, bandwidth_bps=2e5, queue=queue)
+    sim = SimConfig(devices=dev, links=links, deadline_s=None)
+    model = make_fnn((4,), in_dim=64)
+    data = _pooled_data(n)
+    topo = make_topology("complete", n)
+    heap = AsyncDFedRW(model, data, topo, cfg, sim)
+    fleet = FleetDFedRW(model, data, topo, cfg,
+                        dataclasses.replace(sim, engine="fleet"))
+    return heap, fleet
+
+
+@settings(max_examples=12)
+@given(n=st.integers(6, 32), m=st.integers(1, 10), k=st.integers(1, 8),
+       queue=st.booleans(), churn=st.booleans(),
+       dl_frac=st.floats(0.3, 2.0), seed=st.integers(0, 9999))
+def test_timing_parity_property(n, m, k, queue, churn, dl_frac, seed):
+    """Random (n, M, K, deadline, contention, churn) draws: the fleet's
+    window-bucketed timeline reproduces the heap's (time, seq)-ordered event
+    walk exactly — timestamps, completed-step counts, churn kills and event
+    totals all bit-equal."""
+    heap, fleet = _make_pair(n, seed, queue=queue, churn=churn)
+    plan = sample_walks(heap.engine.topo, m, k, np.random.default_rng(seed + 1))
+    deadline = dl_frac * k * 1.0
+    kd_h, ts_h, kill_h, ev_h, _ = heap.simulate_walk_timing(plan, 0.0, deadline)
+    kd_f, ts_f, kill_f, ev_f, _ = fleet.simulate_walk_timing(plan, 0.0, deadline)
+    np.testing.assert_array_equal(ts_h, ts_f)
+    np.testing.assert_array_equal(kd_h, kd_f)
+    np.testing.assert_array_equal(kill_h, kill_f)
+    assert ev_h == ev_f
+
+
+@settings(max_examples=8)
+@given(n=st.integers(8, 32), m=st.integers(2, 10), k=st.integers(2, 8),
+       queue=st.booleans(), seed=st.integers(0, 9999))
+def test_bucketing_preserves_event_order(n, m, k, queue, seed):
+    """Window bucketing preserves causal order: along every chain the
+    executed steps' timestamps are strictly increasing (each step strictly
+    after the hop that delivered its model), and no executed timestamp
+    exceeds the deadline."""
+    heap, fleet = _make_pair(n, seed, queue=queue, hier=True)
+    plan = sample_walks(heap.engine.topo, m, k, np.random.default_rng(seed + 1))
+    deadline = 1.5 * k
+    kd, ts, kill, _, _ = fleet.simulate_walk_timing(plan, 0.0, deadline)
+    for c in range(m):
+        done = ts[c, :kd[c]]
+        assert np.all(np.isfinite(done))
+        assert np.all(np.diff(done) > 0.0)
+        assert np.all(done <= deadline)
+        assert np.all(np.isnan(ts[c, kd[c]:]))
+    # and the heap agrees (hier links, both queue modes)
+    kd_h, ts_h, _, _, _ = heap.simulate_walk_timing(plan, 0.0, deadline)
+    np.testing.assert_array_equal(ts_h, ts)
+
+
+# ------------------------------------------------------- vectorized churn
+
+
+@settings(max_examples=10)
+@given(mean_up=st.floats(2.0, 30.0), mean_down=st.floats(0.5, 10.0),
+       seed=st.integers(0, 9999))
+def test_churn_batch_queries_match_scalar(mean_up, mean_down, seed):
+    """The padded-matrix batch queries (is_up_many / avail_at_many /
+    down_in_many) agree with the scalar bisect path on the same traces."""
+    n = 20
+    cfg = DeviceModelConfig(mean_up_s=mean_up, mean_down_s=mean_down,
+                            seed=seed)
+    fleet = DeviceFleet(n, cfg)
+    rng = np.random.default_rng(seed + 5)
+    devices = rng.integers(0, n, size=200)
+    t = rng.uniform(0.0, 80.0, size=200)
+    t1 = t + rng.uniform(0.0, 5.0, size=200)
+    fleet.extend_many(devices, t1.max())
+    up = fleet.is_up_many(devices, t)
+    avail = fleet.avail_at_many(devices, t)
+    down = fleet.down_in_many(devices, t, t1)
+    for i, (d, a, b) in enumerate(zip(devices, t, t1)):
+        assert up[i] == fleet.is_up(int(d), float(a))
+        assert avail[i] == fleet.avail_at(int(d), float(a))
+        assert down[i] == (fleet.down_during(int(d), float(a), float(b))
+                           is not None)
+
+
+# ------------------------------------------------- sparse planning validity
+
+
+def test_sparse_plan_aggregation_valid():
+    """CSR-gather aggregation planning on an implicit topology: every
+    selected aggregation source is a graph neighbor of (or is) its
+    aggregator, weights are normalized over selected entries, pad columns
+    carry zero weight."""
+    n = 64
+    topo = make_sparse_topology("metro", n, devices_per_cell=8,
+                                cells_per_metro=2, seed=0)
+    data = _pooled_data(n)
+    model = make_fnn((4,), in_dim=64)
+    cfg = DFedRWConfig(m_chains=6, k_walk=5, batch_size=4, n_agg=4,
+                       agg_fraction=0.25, seed=0)
+    sim = SimConfig(devices=DeviceModelConfig(), links=LinkModelConfig(),
+                    deadline_s=None)
+    runner = AsyncDFedRW(model, data, topo, cfg, sim)
+    state = runner.init_state(jax.random.PRNGKey(0))
+    plan, _ = runner.engine.plan_walks(state)
+    agg_devices, agg_rows, agg_weights = runner.engine.plan_aggregation(plan)
+    participants = set(np.unique(plan.devices[plan.mask]).tolist())
+    for r, a in enumerate(agg_devices):
+        nbrs = set(topo.neighbors(int(a)).tolist()) | {int(a)}
+        w = agg_weights[r]
+        sel = w > 0.0
+        assert abs(w[sel].sum() - 1.0) < 1e-12 or not sel.any()
+        for c, dev in enumerate(agg_rows[r]):
+            if w[c] > 0.0:
+                assert int(dev) in nbrs
+                assert int(dev) in participants or int(dev) == int(a)
+            else:
+                assert int(dev) == int(a)  # pad = self id, weight 0
+
+
+# ------------------------------------------------------------ engine plumbing
+
+
+def test_engine_dispatch_and_mismatch():
+    setup = build_scenario("uniform_sync", n=8, seed=0)
+    assert isinstance(setup.runner(), AsyncDFedRW)
+    assert isinstance(setup.runner(engine="fleet"), FleetDFedRW)
+    bad = dataclasses.replace(setup.sim, engine="fleet")
+    with pytest.raises(TypeError):
+        AsyncDFedRW(setup.model, setup.data, setup.topo, setup.cfg, bad)
+    with pytest.raises(AssertionError):
+        dataclasses.replace(setup.sim, engine="warp")
+        AsyncDFedRW(setup.model, setup.data, setup.topo, setup.cfg,
+                    dataclasses.replace(setup.sim, engine="warp"))
+
+
+def test_fleet_rejects_jitter():
+    setup = build_scenario("uniform_sync", n=8, seed=0)
+    sim = dataclasses.replace(
+        setup.sim, engine="fleet",
+        links=LinkModelConfig(latency_s=0.01, jitter_sigma=0.5))
+    with pytest.raises(ValueError, match="jitter"):
+        FleetDFedRW(setup.model, setup.data, setup.topo, setup.cfg, sim)
+
+
+def test_make_link_model_dispatch():
+    assert isinstance(make_link_model(LinkModelConfig()), LinkModel)
+    assert isinstance(make_link_model(HierLinkConfig()), HierarchicalLinkModel)
+    with pytest.raises(TypeError):
+        make_link_model(object())

@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.graph import make_topology
+from repro.core.graph import make_sparse_topology, make_topology
 from repro.core.walk import StragglerModel, sample_walks
 
 
@@ -76,3 +76,33 @@ def test_property_walks_well_formed(n, m, k, h):
     assert (plan.k_m >= 1).all()
     assert (plan.mask.sum(axis=1) == plan.k_m).all()
     assert plan.last_device.shape == (m,)
+
+
+def test_sparse_walk_follows_edges():
+    """sample_walks dispatches to the generative SparseTopology kernel: every
+    consecutive pair is a graph edge or a lazy/rejected self-transition."""
+    topo = make_sparse_topology("metro", 60, devices_per_cell=10,
+                                cells_per_metro=3, seed=0)
+    plan = sample_walks(topo, m=8, k=30, rng=np.random.default_rng(2))
+    for mm in range(8):
+        for kk in range(29):
+            a, b = int(plan.devices[mm, kk]), int(plan.devices[mm, kk + 1])
+            assert a == b or b in topo.neighbors(a).tolist(), (a, b)
+
+
+def test_sparse_walk_visits_approach_uniform():
+    """The implicit MH kernel keeps the uniform stationary distribution."""
+    topo = make_sparse_topology("expander5", 10, seed=1)
+    plan = sample_walks(topo, m=40, k=300, rng=np.random.default_rng(1))
+    freq = np.bincount(plan.devices.reshape(-1), minlength=10) / (40 * 300)
+    assert np.abs(freq - 0.1).max() < 0.03
+
+
+def test_sparse_walk_deterministic_and_start_devices():
+    topo = make_sparse_topology("ring", 16, seed=0)
+    p1 = sample_walks(topo, 4, 9, np.random.default_rng(7),
+                      start_devices=np.array([1, 5, 7, 11]))
+    p2 = sample_walks(topo, 4, 9, np.random.default_rng(7),
+                      start_devices=np.array([1, 5, 7, 11]))
+    np.testing.assert_array_equal(p1.devices, p2.devices)
+    np.testing.assert_array_equal(p1.devices[:, 0], [1, 5, 7, 11])

@@ -21,6 +21,11 @@
 #                             contention/trace-replay, scenario registry
 #                             incl. the slow scenario smoke) plus its
 #                             walk/graph substrate.
+#   tools/check.sh --fleet    fleet lane: the vectorized fleet timeline
+#                             engine — heap-vs-fleet bit-exact parity
+#                             (full runs + property-randomized timing),
+#                             vectorized churn, implicit SparseTopology /
+#                             CSR graph substrate, hierarchical links.
 #   tools/check.sh --docs     docs lane: runnable doctests of the repro.sim
 #                             public API, then tools/docs_check.py — a
 #                             link/anchor/code-path checker over README.md,
@@ -45,6 +50,10 @@ elif [[ "${1:-}" == "--sim" ]]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
     tests/test_sim_engine.py tests/test_sim_async.py tests/test_walk.py \
     tests/test_graph.py "$@"
+elif [[ "${1:-}" == "--fleet" ]]; then
+  shift
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
+    tests/test_sim_fleet.py tests/test_walk.py tests/test_graph.py "$@"
 elif [[ "${1:-}" == "--docs" ]]; then
   shift
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
