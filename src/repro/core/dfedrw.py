@@ -58,7 +58,13 @@ from repro.core.flatten import (
     unflatten_tree,
 )
 from repro.core.graph import Topology
-from repro.core.quantization import QuantConfig, dequantize, quantize, wire_bits
+from repro.core.quantization import (
+    QuantConfig,
+    dequantize,
+    quantize,
+    validate_wire_bits,
+    wire_bits,
+)
 from repro.core.walk import StragglerModel, WalkPlan, sample_walks
 from repro.data.synthetic import FederatedDataset
 from repro.kernels.quantize import payload_quantize_dequantize
@@ -162,10 +168,16 @@ class DFedRW:
         )
         self._trace_count = 0
         self._retrace_warned = False
-        if cfg.engine == "flat":
-            self._round_fn = self._build_round_fn_flat()
-        else:
-            self._round_fn = self._build_round_fn_reference()
+        # Program table: one jitted round function per wire bit-width. The
+        # fused qdq kernels take ``bits`` as a STATIC argument, so multi-bit
+        # dispatch without retrace means pre-building one program per
+        # supported width (prepare_bits) and selecting by per-round data
+        # (execute_round(bits=...)). Each program traces exactly once at
+        # fixed plan shapes; _programs_run tracks how many distinct programs
+        # have executed so the retrace warning stays meaningful.
+        self._round_fns: dict[int, Any] = {}
+        self._programs_run: set[int] = set()
+        self._get_round_fn(cfg.quant.bits)
 
     # ------------------------------------------------------------------ init
     def init_state(self, key: jax.Array) -> DFedRWState:
@@ -186,8 +198,36 @@ class DFedRW:
 
     @property
     def trace_count(self) -> int:
-        """How many times the round function has been (re)traced."""
+        """How many times any round program has been (re)traced. With the
+        per-bit-width program table this equals the number of DISTINCT widths
+        executed so far (each program traces once at fixed plan shapes); it
+        must stay constant across subsequent bit-width switches."""
         return self._trace_count
+
+    def _get_round_fn(self, bits: int):
+        """The compiled round program for a wire bit-width (built on first
+        request; use prepare_bits to pre-build a controller's whole table)."""
+        bits = validate_wire_bits(int(bits))
+        fn = self._round_fns.get(bits)
+        if fn is None:
+            if self.cfg.engine == "flat":
+                fn = self._build_round_fn_flat(bits)
+            else:
+                fn = self._build_round_fn_reference(bits)
+            self._round_fns[bits] = fn
+        return fn
+
+    def prepare_bits(self, widths) -> None:
+        """Pre-build the jitted program for every width an adaptive
+        bits-policy may request, so a mid-run switch never constructs a new
+        program object (tracing still happens on each program's first call —
+        once per width, never again)."""
+        for b in widths:
+            self._get_round_fn(b)
+
+    @property
+    def prepared_bits(self) -> tuple[int, ...]:
+        return tuple(sorted(self._round_fns))
 
     def params_pytree(self, state: DFedRWState) -> Any:
         """The stacked per-device model pytree, independent of engine."""
@@ -196,8 +236,9 @@ class DFedRW:
         return state.device_params
 
     # ---------------------------------------------------------- flat engine
-    def _build_round_fn_flat(self):
+    def _build_round_fn_flat(self, bits: int):
         cfg = self.cfg
+        quant_on = bits < 32
         model = self.model
         spec = self.flat_spec
         d_pad = spec.d_pad
@@ -244,13 +285,13 @@ class DFedRW:
                 # Q(w^{k+1} - w^k) with one wire tensor per leaf (Eq. 13);
                 # the receiver reconstructs w^k + deq(Q(diff)) in the same
                 # fused kernel pass.
-                if cfg.quant.enabled:
+                if quant_on:
                     qkey, sub = jax.random.split(qkey)
                     stepped = payload_quantize_dequantize(
                         stepped - chain_flat,
                         spec,
                         per_message=False,
-                        bits=cfg.quant.bits,
+                        bits=bits,
                         s=cfg.quant.s,
                         key=sub,
                         base=chain_flat,
@@ -289,7 +330,7 @@ class DFedRW:
 
             # Decentralized aggregation (Eq. 11 / Eq. 14); padded aggregator
             # slots carry device ids >= n and zero weights -> dropped.
-            if cfg.quant.enabled:
+            if quant_on:
                 # Eq. 14 payload: one broadcast message Q(w_l^{t,last} - w_l)
                 # per walk-updated device (non-updated neighbors have zero
                 # diffs, which quantize to zero — so only winner rows carry
@@ -303,7 +344,7 @@ class DFedRW:
                     diffs,
                     spec,
                     per_message=True,
-                    bits=cfg.quant.bits,
+                    bits=bits,
                     s=cfg.quant.s,
                     key=sub,
                 )
@@ -330,8 +371,9 @@ class DFedRW:
         return round_fn
 
     # ----------------------------------------------- reference (seed) engine
-    def _build_round_fn_reference(self):
+    def _build_round_fn_reference(self, bits: int):
         cfg = self.cfg
+        qcfg = dataclasses.replace(cfg.quant, bits=bits)
         model = self.model
 
         @functools.partial(jax.jit, static_argnames=())
@@ -380,13 +422,13 @@ class DFedRW:
 
                 # QDFedRW: the hand-off to the next device transmits
                 # Q(w^{k+1} - w^k); the received model is w^k + deq(Q(diff)).
-                if cfg.quant.enabled:
+                if qcfg.enabled:
                     qkey, sub = jax.random.split(qkey)
 
                     def quant_leaf(new, old, leaf_key):
                         diff = new - old
                         qd = dequantize(
-                            quantize(diff, cfg.quant, leaf_key), dtype=new.dtype
+                            quantize(diff, qcfg, leaf_key), dtype=new.dtype
                         )
                         return old + qd
 
@@ -432,14 +474,14 @@ class DFedRW:
             gamma_hat = gamma_hat_from_traj(grad_sq_traj, walk_mask)
 
             # Decentralized aggregation (Eq. 11 / Eq. 14).
-            if cfg.quant.enabled:
+            if qcfg.enabled:
                 qkey, sub = jax.random.split(qkey)
 
                 def agg_leaf(buf, start_buf, leaf_key):
                     diffs = buf[agg_rows] - start_buf[agg_rows]  # (A, n_agg, ...)
                     flat = diffs.reshape((-1,) + diffs.shape[2:])
                     keys = jax.random.split(leaf_key, flat.shape[0])
-                    qd = jax.vmap(lambda d, kk: dequantize(quantize(d, cfg.quant, kk)))(
+                    qd = jax.vmap(lambda d, kk: dequantize(quantize(d, qcfg, kk)))(
                         flat, keys
                     ).reshape(diffs.shape)
                     w = agg_weights.reshape(agg_weights.shape + (1,) * (diffs.ndim - 2))
@@ -627,10 +669,14 @@ class DFedRW:
         agg_w = weights.astype(np.float32)
         return (agg_devices.astype(np.int32), agg_rows, agg_w)
 
-    def _comm_cost_bits(self, plan: WalkPlan, agg: tuple, d_params: int) -> tuple[float, float]:
+    def _comm_cost_bits(
+        self, plan: WalkPlan, agg: tuple, d_params: int,
+        bits: int | None = None,
+    ) -> tuple[float, float]:
         """Eq. 18 comm accounting (vectorized: one bincount over hop edges and
-        one over aggregation sends). Returns (total_bits, busiest_device_bits)."""
-        bits = self.cfg.quant.bits
+        one over aggregation sends). Returns (total_bits, busiest_device_bits).
+        ``bits`` prices the round at a non-default width (adaptive control)."""
+        bits = self.cfg.quant.bits if bits is None else int(bits)
         hop_bits = wire_bits(d_params, bits)
         n = self.topo.n
         # Walk hand-offs: each cross-device hop sends params (or quantized
@@ -666,15 +712,21 @@ class DFedRW:
         agg: tuple,
         key: jax.Array,
         account_plan: WalkPlan | None = None,
+        bits: int | None = None,
     ) -> tuple[DFedRWState, RoundMetrics]:
         """Run one planned round through the jitted engine and update the
         protocol state. ``plan`` may be a (deadline/churn-)truncated version
         of the sampled plan; ``account_plan`` optionally charges Eq. 18 comm
         for a different plan than the one computed (the drop-stragglers
-        baseline pays for hops whose updates it then discards)."""
+        baseline pays for hops whose updates it then discards); ``bits``
+        selects the round's wire bit-width from the per-width program table
+        (None = the static config width) — compute AND Eq. 18 pricing both
+        follow it."""
         cfg = self.cfg
+        bits_eff = cfg.quant.bits if bits is None else int(bits)
+        round_fn = self._get_round_fn(bits_eff)
         agg_devices, agg_rows, agg_w = agg
-        new_params, loss, gamma_hat = self._round_fn(
+        new_params, loss, gamma_hat = round_fn(
             state.device_params,
             jnp.asarray(plan.devices),
             jnp.asarray(plan.mask),
@@ -685,7 +737,8 @@ class DFedRW:
             jnp.int32(state.global_step),
             key,
         )
-        if self._trace_count > 1 and not self._retrace_warned:
+        self._programs_run.add(bits_eff)
+        if self._trace_count > len(self._programs_run) and not self._retrace_warned:
             self._retrace_warned = True
             warnings.warn(
                 "DFedRW round function retraced; a plan shape is not stable "
@@ -693,7 +746,7 @@ class DFedRW:
                 stacklevel=2,
             )
         acct = plan if account_plan is None else account_plan
-        tot, busiest = self._comm_cost_bits(acct, agg, self.flat_spec.d)
+        tot, busiest = self._comm_cost_bits(acct, agg, self.flat_spec.d, bits=bits_eff)
         updated = (state.updated.copy() if state.updated is not None
                    else np.zeros(self.topo.n, dtype=bool))
         updated[np.unique(plan.devices[plan.mask])] = True

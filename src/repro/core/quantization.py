@@ -56,6 +56,8 @@ import jax.numpy as jnp
 __all__ = [
     "QuantConfig",
     "Quantized",
+    "SUPPORTED_WIRE_WIDTHS",
+    "validate_wire_bits",
     "quantize",
     "dequantize",
     "quantize_pytree",
@@ -63,6 +65,22 @@ __all__ = [
     "wire_bits",
     "pytree_wire_bits",
 ]
+
+# Bit-widths the Eq. 12 wire format (and the fused Pallas qdq kernels, whose
+# signed index must fit int8) can carry; 32 is the fp32 pass-through. The
+# adaptive controller (repro.sim.adapt) and the engine's per-width program
+# table validate against this set.
+SUPPORTED_WIRE_WIDTHS = (2, 3, 4, 5, 6, 7, 8, 32)
+
+
+def validate_wire_bits(bits: int) -> int:
+    """Reject widths the wire format cannot carry (sign + index must fit the
+    kernels' int8 lanes; 32 means "no quantization")."""
+    if bits not in SUPPORTED_WIRE_WIDTHS:
+        raise ValueError(
+            f"unsupported wire bit-width {bits!r}; "
+            f"supported: {SUPPORTED_WIRE_WIDTHS}")
+    return int(bits)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -60,9 +60,12 @@ def main(argv=None) -> None:
                     help="deadline policy override (scenarios default to "
                          "'partial', the paper's partial-update aggregation; "
                          "'overlap' resumes cut chains across windows)")
-    ap.add_argument("--bits", type=int, default=0,
-                    help="payload quantization override (<32 = QDFedRW; "
-                         "0 = scenario default)")
+    ap.add_argument("--bits", default="",
+                    help="payload quantization override: an integer width "
+                         "(<32 = QDFedRW) or 'adaptive' for the online "
+                         "uplink-pressure controller (repro.sim.adapt; "
+                         "supported by the *_uplink scenarios); "
+                         "'' = scenario default")
     ap.add_argument("--eval-every", type=int, default=5)
     ap.add_argument("--record", default="",
                     help="save the run as a JSONL event trace at this path")
@@ -113,15 +116,21 @@ def main(argv=None) -> None:
     if args.policy:
         overrides["policy"] = args.policy
     if args.bits:
-        overrides["bits"] = args.bits
+        overrides["bits"] = ("adaptive" if args.bits == "adaptive"
+                             else int(args.bits))
     if args.rounds:
         overrides["rounds"] = args.rounds
     setup = build_scenario(args.scenario, n=args.devices, seed=args.seed,
                            **overrides)
     runner = setup.runner(engine=args.engine or None)
+    bits_desc = str(setup.cfg.quant.bits)
+    if setup.sim.bits_policy is not None:
+        widths = "/".join(
+            str(b) for b in getattr(setup.sim.bits_policy, "widths", ()))
+        bits_desc = f"adaptive({widths})"
     print(f"scenario={setup.name} n={args.devices} rounds={setup.rounds} "
           f"engine={runner.timeline_engine} policy={setup.sim.policy} "
-          f"deadline_s={setup.sim.deadline_s} bits={setup.cfg.quant.bits}")
+          f"deadline_s={setup.sim.deadline_s} bits={bits_desc}")
 
     result = runner.run(setup.rounds, jax.random.PRNGKey(args.seed),
                         setup.x_test, setup.y_test,

@@ -19,12 +19,21 @@ batched array sweeps — at fleet scale pair it with implicit
 ``core.graph.SparseTopology`` graphs and the tiered hierarchy.py link
 model.
 """
+from repro.sim.adapt import (
+    DEFAULT_WIDTHS,
+    AdaptiveBits,
+    BitsObs,
+    BitsPolicy,
+    PinnedBits,
+    ScheduledBits,
+)
 from repro.sim.devices import DeviceFleet, DeviceModelConfig
 from repro.sim.events import Event, EventQueue, UplinkQueue, UplinkStats
 from repro.sim.fleet import FleetDFedRW
 from repro.sim.hierarchy import HierarchicalLinkModel, HierLinkConfig
 from repro.sim.links import (
-    LinkModel, LinkModelConfig, make_link_model, segment_wire_bits)
+    LinkModel, LinkModelConfig, make_link_model, segment_wire_bits,
+    segment_wire_bits_table)
 from repro.sim.runner import AsyncDFedRW, SimConfig, SimResult, SimRoundRecord
 from repro.sim.scenarios import (
     SCENARIOS,
@@ -37,6 +46,7 @@ from repro.sim.scenarios import (
     register_scenario,
 )
 from repro.sim.trace import (
+    TRACE_COMPAT_VERSIONS,
     TRACE_SCHEMA,
     TRACE_SCHEMA_VERSION,
     SimTrace,
@@ -46,10 +56,14 @@ from repro.sim.trace import (
 __all__ = [
     "Event", "EventQueue", "UplinkQueue", "UplinkStats",
     "DeviceFleet", "DeviceModelConfig",
-    "LinkModel", "LinkModelConfig", "segment_wire_bits", "make_link_model",
+    "LinkModel", "LinkModelConfig", "segment_wire_bits",
+    "segment_wire_bits_table", "make_link_model",
     "HierLinkConfig", "HierarchicalLinkModel",
     "AsyncDFedRW", "SimConfig", "SimResult", "SimRoundRecord", "FleetDFedRW",
+    "DEFAULT_WIDTHS", "BitsObs", "BitsPolicy", "PinnedBits", "ScheduledBits",
+    "AdaptiveBits",
     "SCENARIOS", "SimScenario", "SimSetup", "build_scenario", "get_scenario",
     "list_scenarios", "partitioned_topology", "register_scenario",
-    "TRACE_SCHEMA", "TRACE_SCHEMA_VERSION", "SimTrace", "WindowTrace",
+    "TRACE_SCHEMA", "TRACE_SCHEMA_VERSION", "TRACE_COMPAT_VERSIONS",
+    "SimTrace", "WindowTrace",
 ]

@@ -90,13 +90,29 @@ class FleetDFedRW(AsyncDFedRW):
         self._now = 0.0
         self._queue_on = self.link.uplinks is not None
         if self._queue_on:
-            self._bucket_delta = (self.fleet.min_step_time
-                                  + self.link.min_transfer_time(self.hop_bits))
+            self._set_window_bits(self._window_bits)  # derives _bucket_delta
             if not self._bucket_delta > 0.0:
                 raise ValueError(
                     "fleet engine with queue=True needs a positive bucket "
                     "width (min step time + min transfer time)")
         self._q_reset()
+
+    def _set_window_bits(self, bits: int) -> None:
+        """A width switch re-derives the bucket width: the correctness bound
+        'at most one cross-device send per chain per bucket' must hold at
+        the CURRENT window's transfer price, so delta shrinks and grows with
+        the wire size."""
+        super()._set_window_bits(bits)
+        if getattr(self, "_queue_on", False):
+            self._bucket_delta = (self.fleet.min_step_time
+                                  + self.link.min_transfer_time(self.hop_bits))
+
+    def _uplink_totals(self) -> tuple[float, float, int, float, float]:
+        if not self._queue_on:
+            return 0.0, 0.0, 0, math.inf, -math.inf
+        return (float(self._q_queued.sum()), float(self._q_busy_s.sum()),
+                int(self._q_sent.sum()), float(self._q_first.min()),
+                float(self._q_last.max()))
 
     # ----------------------------------------------------- state management
     def _alloc_chains(self, m: int, k: int, b: int) -> None:

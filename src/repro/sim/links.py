@@ -33,7 +33,7 @@ from repro.core.quantization import wire_bits
 from repro.sim.events import UplinkQueue, UplinkStats
 
 __all__ = ["LinkModelConfig", "LinkModel", "segment_wire_bits",
-           "make_link_model"]
+           "segment_wire_bits_table", "make_link_model"]
 
 
 def segment_wire_bits(spec: FlatSpec, bits: int) -> int:
@@ -41,6 +41,13 @@ def segment_wire_bits(spec: FlatSpec, bits: int) -> int:
     aggregation message): a per-leaf sequence of Eq. 12 segments, each with
     its own 64-bit (s, ||w||) header; fp32 degenerates to 32*d."""
     return sum(wire_bits(size, bits) for size in spec.sizes)
+
+
+def segment_wire_bits_table(spec: FlatSpec, widths) -> dict[int, int]:
+    """Per-width payload pricing for an adaptive bits policy's dispatch
+    table: ``{bits: segment_wire_bits(spec, bits)}`` — precomputed so a
+    per-window width switch is a dict lookup on the hot path."""
+    return {int(b): segment_wire_bits(spec, int(b)) for b in widths}
 
 
 @dataclasses.dataclass(frozen=True)

@@ -90,10 +90,16 @@ from repro.core.metrics import History
 from repro.core.walk import ChainResume, WalkPlan
 from repro.data.synthetic import FederatedDataset
 from repro.models.fnn import SmallModel
+from repro.sim.adapt import BitsObs
 from repro.sim.devices import DeviceFleet, DeviceModelConfig
 from repro.sim.events import Event, EventQueue
 from repro.sim.hierarchy import HierLinkConfig
-from repro.sim.links import LinkModelConfig, make_link_model, segment_wire_bits
+from repro.sim.links import (
+    LinkModelConfig,
+    make_link_model,
+    segment_wire_bits,
+    segment_wire_bits_table,
+)
 from repro.sim.trace import SimTrace, WindowTrace, make_header
 
 __all__ = ["SimConfig", "SimRoundRecord", "SimResult", "AsyncDFedRW"]
@@ -116,6 +122,13 @@ class SimConfig:
     the uniform :class:`repro.sim.links.LinkModelConfig` or the tiered
     :class:`repro.sim.hierarchy.HierLinkConfig`.
 
+    ``bits_policy`` installs an adaptive quantization controller
+    (``repro.sim.adapt``): a callable invoked once per window with a
+    :class:`repro.sim.adapt.BitsObs` and returning the window's wire
+    bit-width, drawn from its ``widths`` dispatch table (every width
+    pre-compiles at construction — switching never retraces). None keeps
+    the static ``DFedRWConfig.quant.bits``.
+
     >>> SimConfig().policy, SimConfig().deadline_s   # barrier + paper policy
     ('partial', None)
     >>> SimConfig(deadline_s=5.0, policy="overlap").policy
@@ -129,6 +142,8 @@ class SimConfig:
                                       # synchronous barrier (wait for all chains)
     policy: str = "partial"           # "partial" | "drop" | "overlap"
     engine: str = "heap"              # "heap" | "fleet"
+    bits_policy: Callable | None = None  # adaptive width controller (None =
+                                         # static DFedRWConfig.quant.bits)
 
 
 @dataclasses.dataclass
@@ -166,6 +181,8 @@ class SimRoundRecord:
     killed: np.ndarray                # (M,) bool: device churned out mid-step
     agg_latency_s: float
     resumed: np.ndarray | None = None # (M,) bool: chain spans past this trigger
+    bits: int | None = None           # wire width the window executed at
+                                      # (None on pre-adaptive records)
 
     @property
     def truncated_chains(self) -> int:
@@ -264,7 +281,26 @@ class AsyncDFedRW:
         self.sim = sim
         self.fleet = DeviceFleet(topo.n, sim.devices)
         self.link = make_link_model(sim.links)
-        self.hop_bits = segment_wire_bits(self.engine.flat_spec, cfg.quant.bits)
+        # Adaptive quantization: the policy's dispatch table pre-compiles one
+        # engine program and pre-prices one payload size per width, so the
+        # per-window width choice is pure data — no retrace, no rebuild.
+        self.bits_policy = sim.bits_policy
+        self._base_bits = cfg.quant.bits
+        self._hop_bits_table = {cfg.quant.bits: segment_wire_bits(
+            self.engine.flat_spec, cfg.quant.bits)}
+        if self.bits_policy is not None:
+            widths = tuple(getattr(self.bits_policy, "widths", ()))
+            if not widths:
+                raise ValueError(
+                    "bits_policy must expose a non-empty .widths dispatch "
+                    "table (see repro.sim.adapt.BitsPolicy)")
+            self._hop_bits_table.update(
+                segment_wire_bits_table(self.engine.flat_spec, widths))
+            self.engine.prepare_bits(widths)
+        self._window_bits = self._base_bits
+        self.hop_bits = self._hop_bits_table[self._base_bits]
+        self._uplink_prev = (0.0, 0.0, 0)    # queued_s, busy_s, sent totals
+        self._last_metrics: RoundMetrics | None = None
         self.queue = EventQueue()
         self.t = 0.0
         self._slots: list[_Slot | None] = [None] * cfg.m_chains
@@ -394,6 +430,63 @@ class AsyncDFedRW:
                         int(src), int(a), self.hop_bits, t_trigger))
         return worst - t_trigger
 
+    # -------------------------------------------------- adaptive bit-widths
+    def _uplink_totals(self) -> tuple[float, float, int, float, float]:
+        """Lifetime uplink-contention totals over all senders:
+        (queued_s, busy_s, sent, t_first_start, t_last_done). Zeros/inf
+        sentinels when contention is off. The fleet engine overrides this
+        with its array-backed twin (value-identical on the parity suite)."""
+        ups = getattr(self.link, "uplinks", None)
+        if ups is None:
+            return 0.0, 0.0, 0, math.inf, -math.inf
+        queued = busy = 0.0
+        sent = 0
+        first, last = math.inf, -math.inf
+        for st in ups.stats.values():
+            queued += st.queued_s
+            busy += st.busy_s
+            sent += st.sent
+            first = min(first, st.t_first_start)
+            last = max(last, st.t_last_done)
+        return queued, busy, sent, first, last
+
+    def _set_window_bits(self, bits: int) -> None:
+        """Switch the wire width for the window about to run: hop/aggregation
+        pricing follows the precomputed table (the fleet engine additionally
+        re-derives its bucket width). In-flight transfers keep the price they
+        were admitted at — a message already on the wire has its width."""
+        bits = int(bits)
+        hb = self._hop_bits_table.get(bits)
+        if hb is None:
+            raise ValueError(
+                f"bits_policy chose width {bits} outside its declared "
+                f"dispatch table {sorted(self._hop_bits_table)}")
+        self._window_bits = bits
+        self.hop_bits = hb
+
+    def _choose_bits(self, state: DFedRWState) -> int:
+        """Ask the bits policy for the window's width (static width when no
+        policy is installed). The observation is the PREVIOUS window's
+        uplink-contention delta plus its comm/monitoring metrics;
+        ``state.round`` counts completed windows, i.e. it indexes the window
+        about to run."""
+        if self.bits_policy is None:
+            return self._base_bits
+        queued, busy, sent, first, last = self._uplink_totals()
+        pq, pb, ps = self._uplink_prev
+        self._uplink_prev = (queued, busy, sent)
+        m = self._last_metrics
+        obs = BitsObs(
+            window=int(state.round), t=self.t, bits_prev=self._window_bits,
+            deadline_s=self.sim.deadline_s,
+            queued_s=queued - pq, busy_s=busy - pb, sent=sent - ps,
+            span_s=max(last - first, 0.0) if sent else 0.0,
+            comm_bits_window=0.0 if m is None else m.comm_bits_round,
+            comm_bits_total=state.comm_bits_total,
+            train_loss=None if m is None else m.train_loss,
+            gamma_hat=None if m is None else m.gamma_hat)
+        return int(self.bits_policy(obs))
+
     # ------------------------------------------------------- window planner
     def _fill_slots(self, state: DFedRWState, topo: Topology,
                     t0: float) -> None:
@@ -479,6 +572,11 @@ class AsyncDFedRW:
         self.queue.clear(now=0.0)
         if self.link.uplinks is not None:
             self.link.uplinks.clear()
+        # adaptive-control state rewinds with the timeline (policies are
+        # stateless by contract: their position is the runner's window width)
+        self._set_window_bits(self._base_bits)
+        self._uplink_prev = (0.0, 0.0, 0)
+        self._last_metrics = None
 
     def _drive(
         self,
@@ -523,6 +621,10 @@ class AsyncDFedRW:
         sim = self.sim
         t0 = self.t
         topo = self.topo_at(t0)
+        # adaptive quantization: pick the window's wire width BEFORE any
+        # pricing — the whole window (hops, aggregation burst, compute,
+        # Eq. 18 accounting) runs at one width
+        self._set_window_bits(self._choose_bits(state))
         overlap = sim.policy == "overlap"
         if not overlap:
             # lockstep policies: every trigger clears the board — fresh
@@ -555,14 +657,17 @@ class AsyncDFedRW:
         agg_lat = self._agg_latency(agg, topo.n, t_compute_end)
         self.t = t_compute_end + agg_lat
         new_state, metrics = self.engine.execute_round(
-            state, exec_plan, w_bidx, agg, key, account_plan=win_plan)
+            state, exec_plan, w_bidx, agg, key, account_plan=win_plan,
+            bits=self._window_bits)
+        self._last_metrics = metrics
         # records and traces read the cut-state from the plan's ChainResume
         record = SimRoundRecord(
             round=new_state.round, t_start=t0, t_compute_end=t_compute_end,
             t_end=self.t, events=events, host_loop_s=loop_s,
             k_planned=k_planned, k_done=resume.k_done,
             k_exec=exec_plan.k_m.copy(), killed=killed,
-            agg_latency_s=agg_lat, resumed=resume.live)
+            agg_latency_s=agg_lat, resumed=resume.live,
+            bits=self._window_bits)
         if self._trace is not None:
             self._trace.windows.append(WindowTrace(
                 round=record.round, t_start=t0, t_compute_end=t_compute_end,
@@ -571,7 +676,8 @@ class AsyncDFedRW:
                 k_done=resume.k_done, killed=killed, resumed=resume.live,
                 devices=w_dev, exec_mask=exec_plan.mask, account_mask=w_mask,
                 timestamps=w_ts, bidx=w_bidx, agg_devices=agg[0],
-                agg_rows=agg[1], agg_weights=agg[2]))
+                agg_rows=agg[1], agg_weights=agg[2],
+                bits=self._window_bits))
         # free finished/killed slots; live chains carry their pending event
         self._release_slots(overlap)
         return new_state, metrics, record
@@ -655,8 +761,11 @@ class AsyncDFedRW:
                 k_m=w.account_mask.sum(axis=1).astype(np.int32),
                 timestamps=w.timestamps)
             agg = (w.agg_devices, w.agg_rows, w.agg_weights)
+            # v2 windows carry their executed width (adaptive runs switch it
+            # per window); v1 windows replay at the header's static width
             state, metrics = self.engine.execute_round(
-                state, exec_plan, w.bidx, agg, sub, account_plan=account_plan)
+                state, exec_plan, w.bidx, agg, sub, account_plan=account_plan,
+                bits=w.bits)
             self.t = w.t_end
             record_r = SimRoundRecord(
                 round=w.round, t_start=w.t_start,
@@ -664,7 +773,8 @@ class AsyncDFedRW:
                 events=w.events, host_loop_s=w.host_loop_s,
                 k_planned=w.k_planned, k_done=w.k_done,
                 k_exec=exec_plan.k_m.copy(), killed=w.killed,
-                agg_latency_s=w.agg_latency_s, resumed=w.resumed)
+                agg_latency_s=w.agg_latency_s, resumed=w.resumed,
+                bits=w.bits)
             return state, metrics, record_r
 
         return self._drive(

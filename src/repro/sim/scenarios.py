@@ -17,9 +17,9 @@ crosses, partition-then-heal topologies, device churn mid-walk, chains
 overlapping aggregation triggers, and shared-uplink congestion.
 
 >>> sorted(list_scenarios()) # doctest: +NORMALIZE_WHITESPACE
-['churn_dropout', 'congested_uplink', 'dirichlet_deadline', 'fleet_metro',
- 'million_walks', 'overlap_async', 'partition_heal', 'straggler_tail',
- 'uniform_sync']
+['adaptive_uplink', 'churn_dropout', 'congested_uplink',
+ 'dirichlet_deadline', 'fleet_metro', 'million_walks', 'overlap_async',
+ 'partition_heal', 'straggler_tail', 'uniform_sync']
 >>> get_scenario("overlap_async").build.__name__
 '_overlap_async'
 """
@@ -44,6 +44,7 @@ from repro.core.heterogeneity import partition_dirichlet, partition_similarity
 from repro.core.quantization import QuantConfig
 from repro.data.synthetic import FederatedDataset, synthetic_image_classification
 from repro.models.fnn import make_fnn
+from repro.sim.adapt import AdaptiveBits
 from repro.sim.devices import DeviceModelConfig
 from repro.sim.fleet import FleetDFedRW
 from repro.sim.hierarchy import HierLinkConfig
@@ -101,6 +102,13 @@ SCENARIOS: dict[str, SimScenario] = {}
 
 def register_scenario(name: str, description: str):
     def deco(fn: Callable[..., SimSetup]):
+        if name in SCENARIOS:
+            # a typo'd re-registration used to shadow the existing entry
+            # silently; every name collision is a bug in the caller
+            raise ValueError(
+                f"scenario {name!r} is already registered "
+                f"(by {SCENARIOS[name].build.__name__}); pick a new name or "
+                "remove the old registration explicitly")
         SCENARIOS[name] = SimScenario(name=name, description=description, build=fn)
         return fn
     return deco
@@ -121,6 +129,21 @@ def build_scenario(name: str, n: int = 20, seed: int = 0, **overrides) -> SimSet
 
 
 # ------------------------------------------------------------------ helpers
+
+
+def _resolve_bits(bits, **controller_kw):
+    """Scenario ``bits`` knob: an int is the static width; the string
+    ``"adaptive"`` installs an :class:`repro.sim.adapt.AdaptiveBits`
+    controller (``controller_kw`` forwards its knobs) and returns the
+    controller's top width as the engine's base — the static width the
+    trace header pins and window 0 starts from."""
+    if isinstance(bits, str):
+        if bits != "adaptive":
+            raise ValueError(
+                f"bits={bits!r}: expected an integer width or 'adaptive'")
+        policy = AdaptiveBits(**controller_kw)
+        return policy.widths[-1], policy
+    return int(bits), None
 
 
 def _image_setup(n: int, seed: int, scheme: str = "similarity",
@@ -279,15 +302,17 @@ def _overlap_async(n: int = 20, seed: int = 0, policy: str = "overlap",
 def _congested_uplink(n: int = 20, seed: int = 0, policy: str = "overlap",
                       bandwidth_bps: float = 2e6, latency_s: float = 0.02,
                       queue: bool = True, deadline_factor: float = 1.6,
-                      bits: int = 32, rounds: int = 40, m_chains: int = 8,
-                      **kw) -> SimSetup:
+                      bits: int | str = 32, rounds: int = 40,
+                      m_chains: int = 8, **kw) -> SimSetup:
     data, xt, yt = _image_setup(n, seed)
     # More chains than aggregators on a complete graph: hop fan-out and the
     # per-trigger aggregation burst (every participant unicasts to each
     # aggregator listing it) collide on the senders' uplinks. An fp32 model
     # is ~2.5 Mbit on the wire, so at 2 Mbps a transfer costs ~1.3 s against
     # a 1 s step — queueing is the dominant term, and 8-bit payloads cut it
-    # ~4x.
+    # ~4x. bits="adaptive" installs the repro.sim.adapt controller instead
+    # of a static width (see the adaptive_uplink scenario for its knobs).
+    bits, bits_policy = _resolve_bits(bits)
     cfg = DFedRWConfig(m_chains=m_chains, k_walk=5,
                        quant=QuantConfig(bits=bits), seed=seed)
     dev = DeviceModelConfig(rate_dist="uniform", base_step_time=1.0,
@@ -297,8 +322,43 @@ def _congested_uplink(n: int = 20, seed: int = 0, policy: str = "overlap",
                                           bandwidth_bps=bandwidth_bps,
                                           queue=queue),
                     deadline_s=deadline_factor * cfg.k_walk * dev.base_step_time,
-                    policy=policy, **kw)
+                    policy=policy, bits_policy=bits_policy, **kw)
     return SimSetup(name="congested_uplink", model=make_fnn((100,)),
+                    data=data, topo=make_topology("complete", n), cfg=cfg,
+                    sim=sim, x_test=xt, y_test=yt, rounds=rounds)
+
+
+@register_scenario(
+    "adaptive_uplink",
+    "adaptive per-round quantization on the congested uplink: an "
+    "AdaptiveBits controller (repro.sim.adapt) walks bits up/down each "
+    "window from observed FIFO-uplink queue pressure and the Eq. 18 "
+    "budget — the scenario matrix for where adaptive beats static widths "
+    "(knobs: widths, step_down, step_up, budget_mbits)")
+def _adaptive_uplink(n: int = 20, seed: int = 0, policy: str = "overlap",
+                     bandwidth_bps: float = 2e6, latency_s: float = 0.02,
+                     queue: bool = True, deadline_factor: float = 1.6,
+                     widths: tuple = (4, 6, 8), step_down: float = 0.15,
+                     step_up: float = 0.05, budget_mbits: float | None = None,
+                     rounds: int = 40, m_chains: int = 8, **kw) -> SimSetup:
+    data, xt, yt = _image_setup(n, seed)
+    ctl = AdaptiveBits(
+        widths=tuple(widths), step_down=step_down, step_up=step_up,
+        budget_bits_per_window=(None if budget_mbits is None
+                                else budget_mbits * 1e6))
+    # Same wall-clock world as congested_uplink so the adaptive-vs-static
+    # cross compares nothing but the width policy at identical seeds.
+    cfg = DFedRWConfig(m_chains=m_chains, k_walk=5,
+                       quant=QuantConfig(bits=ctl.widths[-1]), seed=seed)
+    dev = DeviceModelConfig(rate_dist="uniform", base_step_time=1.0,
+                            seed=seed)
+    sim = SimConfig(devices=dev,
+                    links=LinkModelConfig(latency_s=latency_s,
+                                          bandwidth_bps=bandwidth_bps,
+                                          queue=queue),
+                    deadline_s=deadline_factor * cfg.k_walk * dev.base_step_time,
+                    policy=policy, bits_policy=ctl, **kw)
+    return SimSetup(name="adaptive_uplink", model=make_fnn((100,)),
                     data=data, topo=make_topology("complete", n), cfg=cfg,
                     sim=sim, x_test=xt, y_test=yt, rounds=rounds)
 

@@ -12,11 +12,11 @@ deployment-independent *schedule*: the pod-scale gossip deployment
 (``dist/steps``) can consume the same timeline as an integration fixture
 without any wall-clock modeling (ROADMAP: multi-host gossip bring-up).
 
-JSONL schema (version 1)
+JSONL schema (version 2)
 ------------------------
 Line 1 is the header object; every further line is one window:
 
-    {"schema": "repro.sim.trace", "version": 1,
+    {"schema": "repro.sim.trace", "version": 2,
      "n": ..., "m_chains": ..., "k_walk": ..., "batch_size": ...,
      "bits": ..., "policy": ..., "deadline_s": ...,
      ...optional launcher context: "scenario", "key_seed", "rounds",
@@ -24,11 +24,18 @@ Line 1 is the header object; every further line is one window:
 
     {"round": 1, "t_start": 0.0, "t_compute_end": 5.0, "t_end": 5.1,
      "agg_latency_s": 0.1, "events": 40, "host_loop_s": ...,
+     "bits": 8,
      "k_planned": [M], "k_done": [M], "killed": [M], "resumed": [M],
      "devices": [M][K], "exec_mask": [M][K], "account_mask": [M][K],
      "timestamps": [M][K] (null = never executed),
      "bidx": [M][K][B],
      "agg_devices": [A], "agg_rows": [A][n_agg], "agg_weights": [A][n_agg]}
+
+Version 2 adds the per-window ``"bits"`` field: the wire bit-width the
+window executed at (the adaptive controller's choice, or the static config
+width). The reader accepts v1 files unchanged — a v1 window has no ``bits``
+key, loads with ``bits=None``, and replays at the header's static width, so
+every v1 trace still replays bit-exactly (tests/test_sim_adapt.py).
 
 Numbers round-trip exactly: ints are ints, float64 timestamps serialize via
 repr (shortest round-trip), and the float32 aggregation weights pass through
@@ -68,21 +75,27 @@ import numpy as np
 __all__ = [
     "TRACE_SCHEMA",
     "TRACE_SCHEMA_VERSION",
+    "TRACE_COMPAT_VERSIONS",
     "WindowTrace",
     "SimTrace",
     "make_header",
 ]
 
 TRACE_SCHEMA = "repro.sim.trace"
-TRACE_SCHEMA_VERSION = 1
+TRACE_SCHEMA_VERSION = 2
+# Versions from_lines still reads; v1 windows load with bits=None and replay
+# at the header's static width.
+TRACE_COMPAT_VERSIONS = (1, 2)
 
 
 def make_header(*, n: int, m_chains: int, k_walk: int, batch_size: int,
                 bits: int, policy: str, deadline_s: float | None,
                 **context: Any) -> dict:
-    """Header line of a v1 trace. The named fields pin the engine shapes a
-    replay must match; ``context`` carries optional launcher provenance
-    (scenario name, key seed, rounds, eval cadence, build overrides)."""
+    """Header line of a trace (current schema version). The named fields pin
+    the engine shapes a replay must match — ``bits`` is the engine's STATIC
+    config width (per-window adaptive choices live on the windows);
+    ``context`` carries optional launcher provenance (scenario name, key
+    seed, rounds, eval cadence, build overrides)."""
     head = {
         "schema": TRACE_SCHEMA,
         "version": TRACE_SCHEMA_VERSION,
@@ -132,9 +145,12 @@ class WindowTrace:
     agg_devices: np.ndarray     # (A,)
     agg_rows: np.ndarray        # (A, n_agg)
     agg_weights: np.ndarray     # (A, n_agg) float32
+    bits: int | None = None     # wire width this window executed at (v2;
+                                #        None on v1 windows = header width)
 
     def to_json(self) -> dict:
-        return {
+        out = {} if self.bits is None else {"bits": int(self.bits)}
+        out.update({
             "round": int(self.round),
             "t_start": float(self.t_start),
             "t_compute_end": float(self.t_compute_end),
@@ -154,11 +170,14 @@ class WindowTrace:
             "agg_devices": np.asarray(self.agg_devices).tolist(),
             "agg_rows": np.asarray(self.agg_rows).tolist(),
             "agg_weights": np.asarray(self.agg_weights, dtype=np.float64).tolist(),
-        }
+        })
+        return out
 
     @classmethod
     def from_json(cls, obj: dict) -> "WindowTrace":
+        bits = obj.get("bits")
         return cls(
+            bits=None if bits is None else int(bits),
             round=int(obj["round"]),
             t_start=float(obj["t_start"]),
             t_compute_end=float(obj["t_compute_end"]),
@@ -199,10 +218,10 @@ class SimTrace:
         header = json.loads(next(it))
         if header.get("schema") != TRACE_SCHEMA:
             raise ValueError(f"not a {TRACE_SCHEMA} file: {header.get('schema')!r}")
-        if header.get("version") != TRACE_SCHEMA_VERSION:
+        if header.get("version") not in TRACE_COMPAT_VERSIONS:
             raise ValueError(
-                f"trace version {header.get('version')} != "
-                f"supported {TRACE_SCHEMA_VERSION}")
+                f"trace version {header.get('version')} not in "
+                f"supported {TRACE_COMPAT_VERSIONS}")
         return cls(header=header,
                    windows=[WindowTrace.from_json(json.loads(l)) for l in it])
 

@@ -1,0 +1,165 @@
+"""Quantizer-law property suite (paper Eq. 12, Lemma 3, §IV-B).
+
+The adaptive bits controller (repro.sim.adapt) dispatches the SAME Eq. 12
+quantizer across widths {2, 4, 6, 8, 32} per round — so the statistical
+laws the convergence proof leans on must hold at EVERY width the controller
+can pick, not just the default 8. Property-tested here (via the
+hypothesis-compat shim when the real library is absent):
+
+* unbiasedness E[Q(w)] = w within CLT bounds, per width;
+* the Lemma 3 / §IV-B variance bound E||Q(w)-w||^2 <= ||w||^2 d s^2/4,
+  per width;
+* payload-path (fused qdq kernel) round-trip error is monotone
+  non-increasing in bits — the controller's whole premise;
+* the §IV-B wire pricing used by the simulator's link model:
+  segment_wire_bits == sum_l (64 + b*d_l) quantized, 32*d fp32, and its
+  precomputed per-width table matches element-wise.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.flatten import flatten_tree, make_flat_spec
+from repro.core.quantization import (
+    SUPPORTED_WIRE_WIDTHS,
+    QuantConfig,
+    dequantize,
+    quantize,
+    validate_wire_bits,
+    wire_bits,
+)
+from repro.kernels.quantize.ops import payload_quantize_dequantize
+from repro.sim.links import segment_wire_bits, segment_wire_bits_table
+
+CONTROLLER_WIDTHS = (2, 4, 6, 8)
+
+
+# ---------------------------------------------------------------- Eq. 12 laws
+
+@given(bits=st.sampled_from(CONTROLLER_WIDTHS), seed=st.integers(0, 500),
+       scale=st.floats(1e-2, 1e2))
+@settings(max_examples=16, deadline=None)
+def test_property_unbiased_every_width(bits, seed, scale):
+    """E[Q(w)] = w at every width the adaptive controller dispatches."""
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (193,)) * scale
+    cfg = QuantConfig(bits=bits)
+    n = 150
+    acc = jnp.zeros_like(w)
+    for i in range(n):
+        q = quantize(w, cfg, jax.random.fold_in(key, i))
+        acc = acc + dequantize(q)
+    mean = acc / n
+    norm = float(jnp.linalg.norm(w))
+    # per-coordinate s.e. <= s*norm/(2 sqrt(n)) (Lemma 3); 4 sigma tolerance
+    tol = 4.0 * cfg.interval * norm / (2.0 * np.sqrt(n))
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(w), atol=tol)
+
+
+@given(bits=st.sampled_from(CONTROLLER_WIDTHS), seed=st.integers(0, 500),
+       d=st.integers(64, 700))
+@settings(max_examples=16, deadline=None)
+def test_property_variance_bound_every_width(bits, seed, d):
+    """E||Q(w)-w||^2 <= ||w||^2 d s^2/4 (§IV-B) at every controller width."""
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (d,))
+    cfg = QuantConfig(bits=bits)
+    errs = []
+    for i in range(40):
+        q = quantize(w, cfg, jax.random.fold_in(key, 1000 + i))
+        errs.append(float(jnp.sum((dequantize(q) - w) ** 2)))
+    bound = float(jnp.linalg.norm(w)) ** 2 * d * cfg.interval**2 / 4.0
+    assert np.mean(errs) <= bound * 1.05
+
+
+# ------------------------------------------- payload path: monotone in bits
+
+def _payload_mse(payload, spec, bits, key):
+    deq = payload_quantize_dequantize(payload, spec, per_message=True,
+                                      bits=bits, key=key)
+    return float(jnp.mean((deq - payload) ** 2))
+
+
+@given(seed=st.integers(0, 200), per_message=st.booleans())
+@settings(max_examples=8, deadline=None)
+def test_property_qdq_error_monotone_in_bits(seed, per_message):
+    """The fused payload qdq kernel's round-trip MSE is (statistically)
+    non-increasing in bits — the premise that makes width a *fidelity*
+    dial for the adaptive controller. Averaged over RNG keys so stochastic
+    rounding noise cannot flip the ordering."""
+    tree = {"w": jnp.zeros((9, 17)), "b": jnp.zeros((9,))}
+    spec = make_flat_spec(jax.tree_util.tree_map(lambda x: x[0], tree))
+    key = jax.random.PRNGKey(seed)
+    payload = flatten_tree(
+        jax.tree_util.tree_map(
+            lambda x, k: jax.random.normal(k, x.shape),
+            tree, dict(zip(tree, jax.random.split(key, len(tree))))),
+        spec)
+    mses = []
+    for bits in CONTROLLER_WIDTHS:
+        runs = [
+            float(jnp.mean((payload_quantize_dequantize(
+                payload, spec, per_message=per_message, bits=bits,
+                key=jax.random.fold_in(key, 7 * r + bits)) - payload) ** 2))
+            for r in range(6)
+        ]
+        mses.append(np.mean(runs))
+    for lo, hi in zip(mses[1:], mses[:-1]):
+        assert lo <= hi * 1.02, (CONTROLLER_WIDTHS, mses)
+    # and the dial has range: 8 bits is decisively tighter than 2
+    assert mses[-1] < mses[0] / 4.0, mses
+
+
+def test_qdq_fp32_is_width_ceiling():
+    """32-bit wire = no quantization: zero error, and every quantized width
+    sits above it — the top rung of the controller's table is exact."""
+    tree = {"w": jnp.zeros((5, 33))}
+    spec = make_flat_spec(jax.tree_util.tree_map(lambda x: x[0], tree))
+    key = jax.random.PRNGKey(3)
+    payload = flatten_tree({"w": jax.random.normal(key, (5, 33))}, spec)
+    for bits in CONTROLLER_WIDTHS:
+        assert _payload_mse(payload, spec, bits, key) > 0.0
+
+
+# --------------------------------------------------------- §IV-B wire price
+
+@given(bits=st.sampled_from(CONTROLLER_WIDTHS), seed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_property_segment_wire_bits_exact(bits, seed):
+    """segment_wire_bits == sum over leaves of (64 + b*d_l): the link model
+    charges exactly the paper's wire format, per leaf header included."""
+    rng = np.random.default_rng(seed)
+    shapes = [tuple(int(s) for s in rng.integers(1, 40, size=rng.integers(1, 3)))
+              for _ in range(int(rng.integers(1, 5)))]
+    tree = {f"l{i}": jnp.zeros(s) for i, s in enumerate(shapes)}
+    spec = make_flat_spec(tree)
+    expect = sum(64 + bits * int(np.prod(s)) for s in shapes)
+    assert segment_wire_bits(spec, bits) == expect
+    assert segment_wire_bits(spec, 32) == 32 * sum(int(np.prod(s)) for s in shapes)
+
+
+def test_segment_wire_bits_table_matches_pointwise():
+    tree = {"w": jnp.zeros((7, 13)), "b": jnp.zeros((7,))}
+    spec = make_flat_spec(tree)
+    table = segment_wire_bits_table(spec, (2, 4, 6, 8, 32))
+    assert set(table) == {2, 4, 6, 8, 32}
+    for b, v in table.items():
+        assert v == segment_wire_bits(spec, b)
+    # table pricing is strictly monotone below the fp32 passthrough
+    assert table[2] < table[4] < table[6] < table[8] < table[32]
+
+
+def test_wire_bits_fp32_crossover():
+    # per §IV-B, for small payloads the 64-bit header can make low widths
+    # pricier than fp32; wire_bits must report the formula, not a clamp
+    assert wire_bits(1, 8) == 72 > wire_bits(1, 32) == 32
+
+
+def test_validate_wire_bits_gate():
+    for b in SUPPORTED_WIRE_WIDTHS:
+        assert validate_wire_bits(b) == b
+    for bad in (0, 1, 9, 16, 64, -4):
+        with pytest.raises(ValueError):
+            validate_wire_bits(bad)

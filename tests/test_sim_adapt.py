@@ -1,0 +1,286 @@
+"""Adaptive per-round quantization control loop (repro.sim.adapt).
+
+Acceptance anchors:
+
+* **pinned parity** — a run whose bits policy is frozen at a constant B is
+  BIT-exact vs the static ``bits=B`` run on both timeline engines, at fp32
+  and 8-bit: the control loop adds nothing to the numerics, it only picks
+  which pre-compiled program runs;
+* **zero-retrace dispatch** — cycling a width schedule across the program
+  table leaves ``trace_count`` at the number of DISTINCT widths and
+  constant thereafter (warmup = first call per width);
+* **the controller itself** — hysteresis on uplink queue pressure, Eq. 18
+  budget clamp, dead-band hold, rate limit of one rung per window;
+* **trace schema v2** — per-window ``bits`` record/replay bit-exactly, and
+  v1 traces (no bits) still replay through the v2 reader at the header's
+  static width;
+* **registry hygiene** — re-registering a scenario name raises instead of
+  silently shadowing.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import DFedRWConfig, QuantConfig, make_topology
+from repro.core.heterogeneity import partition_similarity
+from repro.data import FederatedDataset, synthetic_image_classification
+from repro.models import make_fnn
+from repro.sim import (
+    AdaptiveBits,
+    AsyncDFedRW,
+    BitsObs,
+    FleetDFedRW,
+    PinnedBits,
+    ScheduledBits,
+    SCENARIOS,
+    SimConfig,
+    SimTrace,
+    TRACE_COMPAT_VERSIONS,
+    TRACE_SCHEMA_VERSION,
+    build_scenario,
+    register_scenario,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    x, y = synthetic_image_classification(n_samples=1200, seed=0, noise=1.0)
+    part = partition_similarity(y, 8, 50, np.random.default_rng(0))
+    data = FederatedDataset.from_partition(x, y, part)
+    topo = make_topology("complete", 8)
+    model = make_fnn((64,))
+    return data, topo, model
+
+
+def _obs(window=1, bits_prev=8, queued_s=0.0, busy_s=1.0,
+         comm_bits_window=0.0):
+    return BitsObs(window=window, t=float(window), bits_prev=bits_prev,
+                   deadline_s=5.0, queued_s=queued_s, busy_s=busy_s,
+                   sent=4, span_s=1.0, comm_bits_window=comm_bits_window,
+                   comm_bits_total=comm_bits_window * window,
+                   train_loss=None, gamma_hat=None)
+
+
+# ------------------------------------------------------------ pinned parity
+
+
+def _runner(data, topo, model, bits, engine, bits_policy=None):
+    cfg = DFedRWConfig(m_chains=4, k_walk=3, batch_size=32,
+                       quant=QuantConfig(bits=bits), seed=5)
+    sim = SimConfig(deadline_s=3.0, policy="overlap", engine=engine,
+                    bits_policy=bits_policy)
+    cls = FleetDFedRW if engine == "fleet" else AsyncDFedRW
+    return cls(model, data, topo, cfg, sim)
+
+
+@pytest.mark.parametrize("engine", ["heap", "fleet"])
+@pytest.mark.parametrize("bits", [32, 8])
+def test_pinned_controller_parity(setup, engine, bits):
+    """Acceptance: bits_policy=PinnedBits(B) is bit-exact vs static bits=B —
+    params, Eq. 18 comm accounting, virtual clock, per-round records — on
+    both timeline engines, at the fp32 and 8-bit anchors."""
+    data, topo, model = setup
+    static = _runner(data, topo, model, bits, engine)
+    pinned = _runner(data, topo, model, bits, engine,
+                     bits_policy=PinnedBits(bits))
+    key = jax.random.PRNGKey(0)
+    rs = static.run(3, key)
+    rp = pinned.run(3, key)
+    np.testing.assert_array_equal(np.asarray(rs.state.device_params),
+                                  np.asarray(rp.state.device_params))
+    assert rs.state.comm_bits_total == rp.state.comm_bits_total
+    assert rs.state.comm_bits_busiest == rp.state.comm_bits_busiest
+    assert rs.virtual_time_s == rp.virtual_time_s
+    assert rs.events_total == rp.events_total
+    for a, b in zip(rs.records, rp.records):
+        assert a.t_end == b.t_end and a.events == b.events
+        assert b.bits == bits       # static runs record their width too
+        assert a.bits == bits
+    assert static.engine.trace_count == 1
+    assert pinned.engine.trace_count == 1
+
+
+# ------------------------------------------------- zero-retrace dispatch
+
+
+def test_scheduled_widths_no_retrace(setup):
+    """Cycling widths through the program table: trace_count == number of
+    DISTINCT widths, constant after each width's first call (warmup), and
+    the per-round records carry the schedule verbatim."""
+    data, topo, model = setup
+    sched = (8, 4, 8, 6, 4, 6)
+    pol = ScheduledBits(schedule=sched)
+    assert pol.widths == (4, 6, 8)
+    runner = _runner(data, topo, model, 8, "heap", bits_policy=pol)
+    assert runner.engine.prepared_bits == (4, 6, 8)
+    res = runner.run(len(sched), jax.random.PRNGKey(1))
+    assert tuple(r.bits for r in res.records) == sched
+    assert runner.engine.trace_count == 3
+    # warmup is over after the first pass: more rounds, zero new traces
+    runner.run(len(sched), jax.random.PRNGKey(2))
+    assert runner.engine.trace_count == 3
+
+
+def test_policy_width_not_prepared_rejected(setup):
+    """A policy returning a width outside its declared table is a hard
+    error, not a silent retrace."""
+    data, topo, model = setup
+
+    class Liar:
+        widths = (8,)
+        def __call__(self, obs):
+            return 4
+
+    runner = _runner(data, topo, model, 8, "heap", bits_policy=Liar())
+    with pytest.raises(ValueError, match="outside its declared"):
+        runner.run(1, jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------------------ the controller
+
+
+def test_adaptive_holds_on_window_zero():
+    pol = AdaptiveBits(widths=(4, 6, 8))
+    assert pol(_obs(window=0, bits_prev=8, queued_s=9.0)) == 8
+
+
+def test_adaptive_steps_down_on_pressure():
+    pol = AdaptiveBits(widths=(4, 6, 8), step_down=0.15, step_up=0.05)
+    assert pol(_obs(bits_prev=8, queued_s=0.2, busy_s=0.8)) == 6
+    assert pol(_obs(bits_prev=6, queued_s=0.2, busy_s=0.8)) == 4
+    # rate limit: one rung per window, and clamped at the bottom
+    assert pol(_obs(bits_prev=4, queued_s=9.0, busy_s=0.1)) == 4
+
+
+def test_adaptive_steps_up_when_idle():
+    pol = AdaptiveBits(widths=(4, 6, 8), step_down=0.15, step_up=0.05)
+    assert pol(_obs(bits_prev=4, queued_s=0.0, busy_s=1.0)) == 6
+    assert pol(_obs(bits_prev=8, queued_s=0.0, busy_s=1.0)) == 8  # top clamp
+
+
+def test_adaptive_dead_band_holds():
+    pol = AdaptiveBits(widths=(4, 6, 8), step_down=0.15, step_up=0.05)
+    assert pol(_obs(bits_prev=6, queued_s=0.1, busy_s=0.9)) == 6
+
+
+def test_adaptive_budget_clamp():
+    """Eq. 18 budget: exceeding bits-per-window forces a step down and
+    vetoes stepping up, regardless of pressure."""
+    pol = AdaptiveBits(widths=(4, 6, 8), step_down=0.15, step_up=0.05,
+                       budget_bits_per_window=1e6)
+    idle = dict(queued_s=0.0, busy_s=1.0)
+    assert pol(_obs(bits_prev=8, comm_bits_window=2e6, **idle)) == 6
+    assert pol(_obs(bits_prev=8, comm_bits_window=0.5e6, **idle)) == 8
+
+
+def test_adaptive_position_off_table():
+    # base width above the table clamps to the top rung
+    pol = AdaptiveBits(widths=(4, 6))
+    assert pol(_obs(window=0, bits_prev=32)) == 6
+
+
+def test_adaptive_validation():
+    with pytest.raises(ValueError, match="step_up"):
+        AdaptiveBits(step_down=0.1, step_up=0.2)
+    with pytest.raises(ValueError):
+        AdaptiveBits(widths=(3.5,))
+    with pytest.raises(ValueError):
+        AdaptiveBits(widths=())
+    # widths are sorted + deduped regardless of input order
+    assert AdaptiveBits(widths=(8, 4, 8, 6)).widths == (4, 6, 8)
+
+
+def test_adaptive_steps_down_under_real_congestion():
+    """Integration: on a congested shared uplink the controller walks the
+    width down from the 8-bit base and holds — the heap run IS the oracle
+    (fleet parity for the adaptive path is covered by the pinned/scheduled
+    tests plus the fleet suite's engine parity)."""
+    setup = build_scenario("adaptive_uplink", n=12, seed=0, rounds=8,
+                           bandwidth_bps=1e6)
+    runner = setup.runner()
+    res = runner.run(8, jax.random.PRNGKey(0), setup.x_test, setup.y_test,
+                     eval_every=8)
+    bits = [r.bits for r in res.records]
+    assert bits[0] == 8                      # window 0 holds the base width
+    assert min(bits) < 8                     # congestion pushed it down
+    assert bits == sorted(bits, reverse=True)  # monotone descent, no flap
+    assert runner.engine.trace_count == len(set(bits))
+
+
+# ------------------------------------------------------------ trace schema v2
+
+
+def test_trace_v2_records_and_replays_bits(setup, tmp_path):
+    """A multi-width run records per-window bits (schema v2) and replays
+    bit-exactly — params, comm, clock — re-dispatching each window to the
+    recorded width."""
+    data, topo, model = setup
+    sched = (8, 4, 6, 4)
+    runner = _runner(data, topo, model, 8, "heap",
+                     bits_policy=ScheduledBits(schedule=sched))
+    res = runner.run(len(sched), jax.random.PRNGKey(0), record=True)
+    path = tmp_path / "adaptive.jsonl"
+    res.trace.save(str(path))
+    trace = SimTrace.load(str(path))
+    assert trace.header["version"] == TRACE_SCHEMA_VERSION == 2
+    assert [w.bits for w in trace.windows] == list(sched)
+
+    replayer = _runner(data, topo, model, 8, "heap",
+                       bits_policy=ScheduledBits(schedule=sched))
+    rep = replayer.replay(trace, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(res.state.device_params),
+                                  np.asarray(rep.state.device_params))
+    assert res.state.comm_bits_total == rep.state.comm_bits_total
+    assert res.virtual_time_s == rep.virtual_time_s
+    assert [r.bits for r in rep.records] == list(sched)
+    assert replayer.engine.trace_count == len(set(sched))
+
+
+def test_trace_v1_replays_through_v2_reader(setup, tmp_path):
+    """Backward compat: a v1 trace (no per-window bits) loads with
+    bits=None and replays bit-exactly at the header's static width."""
+    data, topo, model = setup
+    runner = _runner(data, topo, model, 8, "heap")
+    res = runner.run(3, jax.random.PRNGKey(0), record=True)
+    lines = res.trace.to_lines()
+    header = json.loads(lines[0])
+    header["version"] = 1
+    v1_lines = [json.dumps(header)]
+    for ln in lines[1:]:
+        w = json.loads(ln)
+        w.pop("bits", None)
+        v1_lines.append(json.dumps(w))
+    trace = SimTrace.from_lines(v1_lines)
+    assert 1 in TRACE_COMPAT_VERSIONS
+    assert all(w.bits is None for w in trace.windows)
+
+    replayer = _runner(data, topo, model, 8, "heap")
+    rep = replayer.replay(trace, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(res.state.device_params),
+                                  np.asarray(rep.state.device_params))
+    assert res.state.comm_bits_total == rep.state.comm_bits_total
+    assert res.virtual_time_s == rep.virtual_time_s
+    assert replayer.engine.trace_count == 1
+
+
+# ------------------------------------------------------------ registry
+
+
+def test_register_scenario_duplicate_raises():
+    with pytest.raises(ValueError, match="already registered"):
+        register_scenario("congested_uplink", "dup")(lambda **kw: None)
+    # the original registration is untouched
+    assert build_scenario("congested_uplink", n=6, seed=0,
+                          rounds=1).name == "congested_uplink"
+
+
+def test_register_scenario_fresh_name_ok():
+    name = "_test_only_scenario"
+    try:
+        register_scenario(name, "ephemeral")(lambda **kw: None)
+        assert name in SCENARIOS
+    finally:
+        SCENARIOS.pop(name, None)
+    assert name not in SCENARIOS

@@ -26,6 +26,12 @@
 #                             (full runs + property-randomized timing),
 #                             vectorized churn, implicit SparseTopology /
 #                             CSR graph substrate, hierarchical links.
+#   tools/check.sh --quant    quant lane: quantizer-law property suite
+#                             (unbiasedness/variance bound/monotonicity at
+#                             every controller width, §IV-B wire pricing),
+#                             the kernel qdq tests, and the adaptive
+#                             bits-control loop (pinned parity, zero-retrace
+#                             dispatch, trace schema v2).
 #   tools/check.sh --docs     docs lane: runnable doctests of the repro.sim
 #                             public API, then tools/docs_check.py — a
 #                             link/anchor/code-path checker over README.md,
@@ -54,6 +60,11 @@ elif [[ "${1:-}" == "--fleet" ]]; then
   shift
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
     tests/test_sim_fleet.py tests/test_walk.py tests/test_graph.py "$@"
+elif [[ "${1:-}" == "--quant" ]]; then
+  shift
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
+    tests/test_quantize_laws.py tests/test_quantization.py \
+    tests/test_kernels_quantize.py tests/test_sim_adapt.py "$@"
 elif [[ "${1:-}" == "--docs" ]]; then
   shift
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
