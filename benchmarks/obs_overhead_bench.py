@@ -1,0 +1,122 @@
+"""Obs overhead guard: instrumented vs uninstrumented sim rounds.
+
+The telemetry contract (docs/OBSERVABILITY.md) is that recording is off the
+hot path: host-side bookkeeping at window boundaries only, bit-exact outputs,
+and round wall time within 5% of an uninstrumented run on the bench config.
+This module measures and ENFORCES that — two identical runners (one with a
+virtual-clock Recorder attached) execute the same scenario with the same
+PRNG key sequence, params/virtual-time are compared bit-for-bit at the end,
+and the run raises (failing benchmarks/run.py) if the measured overhead
+exceeds the budget.
+
+Timing protocol matches round_engine_bench's interleaved per-round pairs:
+this container is cgroup CPU-throttled, so a short sleep before each timed
+pair lets the quota refill, the two arms alternate within a pair to share
+any residual throttle, and the per-arm MIN over all rounds approximates the
+unthrottled round latency (medians also reported). Results go to
+BENCH_obs_overhead.json at the repo root.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.obs import Recorder, VirtualClock
+from repro.sim import build_scenario
+
+SCENARIO = "straggler_tail"
+N_DEV = 20
+ROUNDS = int(os.environ.get("REPRO_BENCH_OBS_ROUNDS", 30))
+OVERHEAD_BUDGET = 1.05
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_obs_overhead.json")
+
+
+def _arm(obs: bool):
+    setup = build_scenario(SCENARIO, n=N_DEV, seed=0, rounds=ROUNDS)
+    runner = setup.runner()
+    rec = None
+    if obs:
+        rec = Recorder(clock=VirtualClock())
+        runner.attach_obs(rec)
+    runner._reset_timeline()
+    state = runner.init_state(jax.random.PRNGKey(0))
+    return {"runner": runner, "rec": rec, "state": state,
+            "key": jax.random.PRNGKey(0), "times": []}
+
+
+def _round(a, timed: bool) -> None:
+    a["key"], sub = jax.random.split(a["key"])
+    t0 = time.perf_counter()
+    a["state"], _, _ = a["runner"].run_round(a["state"], sub)
+    jax.block_until_ready(a["state"].device_params)
+    if timed:
+        a["times"].append(time.perf_counter() - t0)
+
+
+def run() -> None:
+    arms = {"obs_off": _arm(False), "obs_on": _arm(True)}
+    # Warmup round per arm: compiles the round program outside the timed
+    # region (both arms run the same executable — attach_obs compiles
+    # nothing; the key streams stay aligned because obs consumes no RNG).
+    for a in arms.values():
+        _round(a, timed=False)
+    order = [arms["obs_off"], arms["obs_on"]]
+    for r in range(ROUNDS):
+        time.sleep(0.15)  # let the cgroup CPU quota refill
+        # alternate which arm runs first after the refill, so neither arm
+        # systematically inherits the fresher quota / warmer caches
+        for a in (order if r % 2 == 0 else order[::-1]):
+            _round(a, timed=True)
+
+    _check_exact(arms)
+    ms_off = float(np.min(arms["obs_off"]["times"]) * 1e3)
+    ms_on = float(np.min(arms["obs_on"]["times"]) * 1e3)
+    ratio = ms_on / ms_off
+    rec = arms["obs_on"]["rec"]
+    report = {
+        "config": {"scenario": SCENARIO, "n": N_DEV, "rounds": ROUNDS,
+                   "overhead_budget": OVERHEAD_BUDGET},
+        "ms_per_round_min_obs_off": ms_off,
+        "ms_per_round_min_obs_on": ms_on,
+        "ms_per_round_median_obs_off": float(np.median(arms["obs_off"]["times"]) * 1e3),
+        "ms_per_round_median_obs_on": float(np.median(arms["obs_on"]["times"]) * 1e3),
+        "overhead_ratio": ratio,
+        "within_budget": ratio <= OVERHEAD_BUDGET,
+        "params_bit_exact": True,   # _check_exact raised otherwise
+        "trace_count_obs_on": arms["obs_on"]["runner"].engine.trace_count,
+        "trace_count_obs_off": arms["obs_off"]["runner"].engine.trace_count,
+        "obs_events_total": len(rec.events),
+        "notes": "CPU numbers; interleaved per-round pairs, min over rounds "
+                 "(quota-refill sleeps), same PRNG key sequence both arms",
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    emit("obs_overhead_off", ms_off * 1e3, "ms_per_round=%.3f" % ms_off)
+    emit("obs_overhead_on", ms_on * 1e3, "ratio=%.4f" % ratio)
+    if ratio > OVERHEAD_BUDGET:
+        raise RuntimeError(
+            f"obs overhead {ratio:.3f}x exceeds the {OVERHEAD_BUDGET:.2f}x "
+            f"budget (obs-on {ms_on:.2f}ms vs obs-off {ms_off:.2f}ms per "
+            f"round)")
+
+
+def _check_exact(arms: dict) -> None:
+    p_off = np.asarray(arms["obs_off"]["state"].device_params)
+    p_on = np.asarray(arms["obs_on"]["state"].device_params)
+    if not np.array_equal(p_off, p_on):
+        raise RuntimeError("obs-on params diverged from obs-off: recording "
+                           "must not touch the compute path")
+    t_off = arms["obs_off"]["runner"].t
+    t_on = arms["obs_on"]["runner"].t
+    if t_off != t_on:
+        raise RuntimeError(f"obs-on virtual time {t_on} != obs-off {t_off}")
+
+
+if __name__ == "__main__":
+    run()

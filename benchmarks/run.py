@@ -27,8 +27,34 @@ MODULES = [
     "round_engine_bench",
     "serve_engine_bench",
     "sim_scenarios_bench",
+    "obs_overhead_bench",
     "pod_gossip_roofline",
 ]
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def stamp_provenance() -> list[str]:
+    """Stamp every shipped BENCH_*.json at the repo root with the shared
+    provenance header (repro.obs.provenance): jax/numpy versions, platform,
+    device kind, git rev, the report's own config hash, UTC timestamp.
+    tools/docs_check.py enforces the header's presence. Returns the stamped
+    paths."""
+    import glob
+    import json
+
+    from repro.obs import provenance
+
+    stamped = []
+    for path in sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json"))):
+        with open(path) as f:
+            report = json.load(f)
+        report["provenance"] = provenance(config=report.get("config"))
+        with open(path, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+        stamped.append(os.path.basename(path))
+    return stamped
 
 
 def main() -> None:
@@ -46,6 +72,8 @@ def main() -> None:
         except Exception:
             failed.append(mod)
             traceback.print_exc()
+    stamped = stamp_provenance()
+    print(f"# provenance stamped into {stamped}")
     if failed:
         print(f"# FAILED: {failed}")
         sys.exit(1)

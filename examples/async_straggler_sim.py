@@ -20,6 +20,11 @@ simulation) to demonstrate the bit-exact replay contract — the same
 mechanism that lets a recorded timeline drive the pod-scale gossip
 deployment as an integration fixture. See docs/SIMULATOR.md.
 
+The overlap run also carries a virtual-clock ``repro.obs`` recorder: the
+telemetry stream is saved alongside the trace and rendered through the
+standard run report (time-in-phase, Eq. 18 comm by width, resume/kill
+counters, window-length tails). See docs/OBSERVABILITY.md.
+
 Usage:  PYTHONPATH=src python examples/async_straggler_sim.py
 """
 import os
@@ -28,16 +33,21 @@ import tempfile
 import jax
 import numpy as np
 
+from repro.obs import ObsStream, Recorder, VirtualClock, provenance, render_report
 from repro.sim import SimTrace, build_scenario
 
 N, SEED, ROUNDS = 20, 0, 24
 TRACE_PATH = os.path.join(tempfile.gettempdir(),
                           "async_straggler_trace.jsonl")
+OBS_PATH = os.path.join(tempfile.gettempdir(),
+                        "async_straggler_obs.jsonl")
 
 
-def run(name: str, record: bool = False, **overrides):
+def run(name: str, record: bool = False, obs: bool = False, **overrides):
     setup = build_scenario(name, n=N, seed=SEED, rounds=ROUNDS, **overrides)
     runner = setup.runner()
+    if obs:
+        runner.attach_obs(Recorder(clock=VirtualClock()))
     label = f"{name}/{setup.sim.policy}"
     print(f"\n== {label}: deadline={setup.sim.deadline_s}s "
           f"bits={setup.cfg.quant.bits}")
@@ -58,13 +68,14 @@ def run(name: str, record: bool = False, **overrides):
     print(f"  final acc={final['accuracy']:.3f} "
           f"virtual_time={final['virtual_time_s']:.0f}s "
           f"events={final['events_total']} full_walks={finished}")
-    return result, setup
+    return result, setup, runner
 
 
 def main() -> None:
-    overlap, setup = run("overlap_async", policy="overlap", record=True)
-    partial, _ = run("overlap_async", policy="partial")
-    drop, _ = run("overlap_async", policy="drop")
+    overlap, setup, runner = run("overlap_async", policy="overlap",
+                                 record=True, obs=True)
+    partial, _, _ = run("overlap_async", policy="partial")
+    drop, _, _ = run("overlap_async", policy="drop")
 
     a_o, a_p, a_d = (r.final()["accuracy"] for r in (overlap, partial, drop))
     print(f"\noverlapping rounds vs truncate: {a_o - a_p:+.3f} accuracy; "
@@ -88,6 +99,12 @@ def main() -> None:
           f"(schema v{overlap.trace.header['version']}); replayed "
           f"bit-identically through the flat engine. CLI equivalent:\n"
           f"  python -m repro.launch.sim --replay {TRACE_PATH}")
+
+    # --- telemetry stream: save + render the standard run report ----------
+    runner.obs.save(OBS_PATH, provenance=provenance(),
+                    workload="example", scenario=setup.name, policy="overlap")
+    print(f"\nobs stream -> {OBS_PATH}\n")
+    print(render_report(ObsStream.load(OBS_PATH)))
 
 
 if __name__ == "__main__":

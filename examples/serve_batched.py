@@ -4,14 +4,23 @@ MoE), with staggered arrivals and mixed request lengths — requests are
 admitted as slots free up and retired on their own stop conditions, all
 inside two compiled programs per arch.
 
+Each engine carries an active-time ``repro.obs`` recorder (compile pauses
+excluded): all three archs share one stream, which is saved and rendered
+through the standard run report at the end — per-step-kind time, request
+counts, TTFT/TPOT tails. See docs/OBSERVABILITY.md.
+
   PYTHONPATH=src python examples/serve_batched.py
 """
+import os
+import tempfile
+
 import numpy as np
 
 ARCHS = ["qwen2-72b", "mamba2-130m", "jamba-1.5-large-398b"]
+OBS_PATH = os.path.join(tempfile.gettempdir(), "serve_batched_obs.jsonl")
 
 
-def run_arch(arch: str) -> None:
+def run_arch(arch: str, rec) -> None:
     import jax
     import jax.numpy as jnp
 
@@ -37,7 +46,8 @@ def run_arch(arch: str) -> None:
         ))
 
     eng = ServeEngine(cfg, params,
-                      EngineConfig(max_concurrency=4, max_len=64, chunk=8))
+                      EngineConfig(max_concurrency=4, max_len=64, chunk=8),
+                      obs=rec)
     results = eng.run(reqs)
     s = eng.metrics.summary()
     print(f"\n=== {cfg.name} ===")
@@ -54,5 +64,14 @@ def run_arch(arch: str) -> None:
 
 
 if __name__ == "__main__":
+    from repro.obs import (
+        ObsStream, PausableWallClock, Recorder, provenance, render_report,
+    )
+
+    recorder = Recorder(clock=PausableWallClock())
     for arch in ARCHS:
-        run_arch(arch)
+        run_arch(arch, recorder)
+    recorder.save(OBS_PATH, provenance=provenance(),
+                  workload="example", archs=",".join(ARCHS))
+    print(f"\nobs stream -> {OBS_PATH}\n")
+    print(render_report(ObsStream.load(OBS_PATH)))

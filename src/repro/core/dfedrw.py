@@ -167,7 +167,9 @@ class DFedRW:
             jax.eval_shape(model.init, jax.random.PRNGKey(0))
         )
         self._trace_count = 0
-        self._retrace_warned = False
+        self._retraces_warned = 0   # retraces already reported via warnings
+        self._retraces_obs = 0      # retraces already exported to the recorder
+        self.obs = None             # optional repro.obs.Recorder (attach_obs)
         # Program table: one jitted round function per wire bit-width. The
         # fused qdq kernels take ``bits`` as a STATIC argument, so multi-bit
         # dispatch without retrace means pre-building one program per
@@ -203,6 +205,26 @@ class DFedRW:
         executed so far (each program traces once at fixed plan shapes); it
         must stay constant across subsequent bit-width switches."""
         return self._trace_count
+
+    @property
+    def programs_run(self) -> tuple[int, ...]:
+        """Distinct wire bit-widths whose compiled program has executed."""
+        return tuple(sorted(self._programs_run))
+
+    @property
+    def retrace_count(self) -> int:
+        """Traces beyond one per distinct executed width — every unit here is
+        a compiled executable thrown away by an unstable plan shape."""
+        if not self._programs_run:
+            return 0
+        return max(0, self._trace_count - len(self._programs_run))
+
+    def attach_obs(self, rec) -> None:
+        """Attach a ``repro.obs.Recorder``. Instrumentation is host-side
+        Python at round boundaries only — never a callback inside the jitted
+        round programs — so attaching a recorder changes no compiled program,
+        no RNG stream and no output bit."""
+        self.obs = rec
 
     def _get_round_fn(self, bits: int):
         """The compiled round program for a wire bit-width (built on first
@@ -701,7 +723,11 @@ class DFedRW:
 
     # ------------------------------------------------------------------- run
     def run_round(self, state: DFedRWState, key: jax.Array) -> tuple[DFedRWState, RoundMetrics]:
-        plan, bidx, agg = self._plan_round(state)
+        if self.obs is None:
+            plan, bidx, agg = self._plan_round(state)
+        else:
+            with self.obs.span("engine/plan"):
+                plan, bidx, agg = self._plan_round(state)
         return self.execute_round(state, plan, bidx, agg, key)
 
     def execute_round(
@@ -723,6 +749,8 @@ class DFedRW:
         (None = the static config width) — compute AND Eq. 18 pricing both
         follow it."""
         cfg = self.cfg
+        obs = self.obs
+        t_obs = obs.clock.now() if obs is not None else 0.0
         bits_eff = cfg.quant.bits if bits is None else int(bits)
         round_fn = self._get_round_fn(bits_eff)
         agg_devices, agg_rows, agg_w = agg
@@ -738,13 +766,17 @@ class DFedRW:
             key,
         )
         self._programs_run.add(bits_eff)
-        if self._trace_count > len(self._programs_run) and not self._retrace_warned:
-            self._retrace_warned = True
+        retraces = self.retrace_count
+        if retraces > self._retraces_warned:
+            # Re-armed: every NEW retrace warns again (a monotone counter, not
+            # a fire-once latch — a second unstable shape is still reported).
             warnings.warn(
-                "DFedRW round function retraced; a plan shape is not stable "
-                "across rounds (this forfeits compiled-executable reuse)",
+                f"DFedRW round function retraced ({retraces} retrace(s) so "
+                f"far); a plan shape is not stable across rounds (this "
+                f"forfeits compiled-executable reuse)",
                 stacklevel=2,
             )
+            self._retraces_warned = retraces
         acct = plan if account_plan is None else account_plan
         tot, busiest = self._comm_cost_bits(acct, agg, self.flat_spec.d, bits=bits_eff)
         updated = (state.updated.copy() if state.updated is not None
@@ -767,6 +799,17 @@ class DFedRW:
             comm_bits_busiest_round=busiest,
             gamma_hat=float(gamma_hat),
         )
+        if obs is not None:
+            obs.record_span("engine/execute_round", t_obs, obs.clock.now())
+            obs.counter("engine/rounds")
+            obs.counter("engine/programs", 1, bits=bits_eff)
+            obs.counter("engine/comm_bits", tot, bits=bits_eff)
+            obs.counter("engine/comm_bits_busiest", busiest)
+            obs.counter("engine/steps_executed", int(plan.mask.sum()))
+            if retraces > self._retraces_obs:
+                obs.counter("engine/retraces", retraces - self._retraces_obs)
+                self._retraces_obs = retraces
+            obs.flush()
         return new_state, metrics
 
     # ------------------------------------------------------------- evaluate

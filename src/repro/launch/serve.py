@@ -111,6 +111,9 @@ def main(argv=None) -> None:
                     help="replay each request through the sequential decode "
                          "path and require identical outputs (temp 0)")
     ap.add_argument("--json", default="", help="write the metrics summary here")
+    ap.add_argument("--obs", default="",
+                    help="record a repro.obs telemetry stream (JSONL) here "
+                         "(report: python tools/obs_report.py <path>)")
     args = ap.parse_args(argv)
 
     import jax
@@ -129,10 +132,15 @@ def main(argv=None) -> None:
     n_dev = len(jax.devices())
     mesh = make_host_mesh(data=max(n_dev // args.mesh_model, 1), model=args.mesh_model)
 
+    obs = None
+    if args.obs:
+        from repro.obs import PausableWallClock, Recorder
+        obs = Recorder(clock=PausableWallClock())
+
     reqs = build_requests(args, cfg)
     eng = ServeEngine(cfg, params, EngineConfig(
         max_concurrency=args.max_concurrency, max_len=max_len,
-        chunk=args.chunk, dtype=dtype, seed=args.seed), mesh=mesh)
+        chunk=args.chunk, dtype=dtype, seed=args.seed), mesh=mesh, obs=obs)
     results = eng.run(reqs)
 
     summary = eng.metrics.summary()
@@ -170,6 +178,13 @@ def main(argv=None) -> None:
         with open(args.json, "w") as f:
             json.dump(summary, f, indent=2)
         print(f"wrote {args.json}")
+
+    if args.obs:
+        from repro.obs import provenance
+        obs.save(args.obs, provenance=provenance(config=vars(args)),
+                 workload="serve", arch=cfg.name)
+        print(f"obs: wrote {args.obs} "
+              f"(report: python tools/obs_report.py {args.obs})")
 
 
 if __name__ == "__main__":

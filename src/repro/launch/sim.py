@@ -72,6 +72,10 @@ def main(argv=None) -> None:
     ap.add_argument("--replay", default="",
                     help="replay a recorded JSONL trace (scenario/seed come "
                          "from its header) instead of simulating")
+    ap.add_argument("--obs", default="",
+                    help="record a repro.obs telemetry stream (JSONL) here — "
+                         "virtual-clock spans/counters, deterministic per "
+                         "seed (report: python tools/obs_report.py <path>)")
     args = ap.parse_args(argv)
 
     from repro.sim import build_scenario, list_scenarios
@@ -82,6 +86,23 @@ def main(argv=None) -> None:
         return
 
     import jax
+
+    def _attach_obs(runner):
+        if not args.obs:
+            return None
+        from repro.obs import Recorder, VirtualClock
+        rec = Recorder(clock=VirtualClock())
+        runner.attach_obs(rec)
+        return rec
+
+    def _save_obs(rec, setup) -> None:
+        if rec is None:
+            return
+        from repro.obs import provenance
+        rec.save(args.obs, provenance=provenance(config=vars(args)),
+                 workload="sim", scenario=setup.name)
+        print(f"obs: wrote {args.obs} "
+              f"(report: python tools/obs_report.py {args.obs})")
 
     if args.replay:
         if args.record:
@@ -102,6 +123,7 @@ def main(argv=None) -> None:
         setup = build_scenario(h["scenario"], n=h["n"], seed=h["build_seed"],
                                **overrides)
         runner = setup.runner()
+        rec = _attach_obs(runner)
         print(f"replay={args.replay} scenario={h['scenario']} n={h['n']} "
               f"windows={len(trace.windows)} policy={h['policy']} "
               f"bits={h['bits']} (trace schema v{h['version']})")
@@ -110,6 +132,7 @@ def main(argv=None) -> None:
                                eval_every=max(h.get("eval_every", 1), 1),
                                callback=_progress_cb)
         _summary(result)
+        _save_obs(rec, setup)
         return
 
     overrides = {}
@@ -132,11 +155,13 @@ def main(argv=None) -> None:
           f"engine={runner.timeline_engine} policy={setup.sim.policy} "
           f"deadline_s={setup.sim.deadline_s} bits={bits_desc}")
 
+    rec = _attach_obs(runner)
     result = runner.run(setup.rounds, jax.random.PRNGKey(args.seed),
                         setup.x_test, setup.y_test,
                         eval_every=max(args.eval_every, 1),
                         callback=_progress_cb, record=bool(args.record))
     _summary(result)
+    _save_obs(rec, setup)
     if args.record:
         # launcher provenance so --replay can rebuild the same scenario
         result.trace.header.update(

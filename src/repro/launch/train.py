@@ -55,6 +55,15 @@ def protocol_main(args) -> None:
             n_selected=args.devices if args.algo != "fedavg" else args.chains,
             local_epochs=args.epochs, straggler=strag, quant=quant))
 
+    rec = None
+    if args.obs:
+        if not hasattr(runner, "attach_obs"):
+            raise SystemExit(f"--obs: --algo {args.algo} exposes no telemetry "
+                             f"hooks (supported: dfedrw)")
+        from repro.obs import Recorder
+        rec = Recorder()   # wall clock: per-round engine spans + Eq. 18 bits
+        runner.attach_obs(rec)
+
     def cb(r, metrics, evald):
         print(f"round {r+1:4d}  loss={metrics.train_loss:.4f} "
               f"acc={evald['accuracy']:.4f} busiest_mb={metrics.comm_bits_busiest_round/8e6:.2f}")
@@ -62,6 +71,12 @@ def protocol_main(args) -> None:
     hist = train_loop(runner, args.rounds, xt, yt,
                       eval_every=max(args.rounds // 20, 1), callback=cb)
     print(f"final: {hist.final()}")
+    if rec is not None:
+        from repro.obs import provenance
+        rec.save(args.obs, provenance=provenance(config=vars(args)),
+                 workload="train", algo=args.algo)
+        print(f"obs: wrote {args.obs} "
+              f"(report: python tools/obs_report.py {args.obs})")
     if args.checkpoint_dir:
         # persist the mean model
         state = runner.init_state(jax.random.PRNGKey(0))  # template
@@ -168,6 +183,9 @@ def main(argv=None) -> None:
     p.add_argument("--chains", type=int, default=5)
     p.add_argument("--topology", default="complete")
     p.add_argument("--checkpoint-dir", default="")
+    p.add_argument("--obs", default="",
+                   help="record a repro.obs telemetry stream (JSONL) here "
+                        "(report: python tools/obs_report.py <path>)")
     q = sub.add_parser("pod")
     q.add_argument("--arch", required=True)
     q.add_argument("--smoke", action="store_true")

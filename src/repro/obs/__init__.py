@@ -1,0 +1,42 @@
+"""repro.obs — unified telemetry across the round engine, simulator, serving.
+
+One ``Recorder`` (counters / gauges / histograms / spans) over a pluggable
+clock records every engine off the hot path; streams serialize as versioned
+JSONL (``ObsStream``) with a shared provenance header, and render as run
+reports or Prometheus text. See docs/OBSERVABILITY.md for the full model,
+schema and cookbook.
+
+Quickstart::
+
+    from repro.obs import Recorder, VirtualClock, provenance
+    rec = Recorder(clock=VirtualClock())
+    runner.attach_obs(rec)            # AsyncDFedRW / FleetDFedRW / DFedRW
+    runner.run(rounds, key, x_test, y_test)
+    rec.save("obs.jsonl", provenance=provenance())
+    # then: python tools/obs_report.py obs.jsonl
+"""
+from .provenance import PROVENANCE_KEYS, config_hash, provenance
+from .recorder import (HIST_RESERVOIR, PausableWallClock, Recorder,
+                       VirtualClock, WallClock, jax_profile)
+from .report import render_prometheus, render_report
+from .stream import (OBS_COMPAT_VERSIONS, OBS_SCHEMA, OBS_SCHEMA_VERSION,
+                     ObsStream, make_obs_header)
+
+__all__ = [
+    "Recorder",
+    "WallClock",
+    "PausableWallClock",
+    "VirtualClock",
+    "jax_profile",
+    "HIST_RESERVOIR",
+    "ObsStream",
+    "OBS_SCHEMA",
+    "OBS_SCHEMA_VERSION",
+    "OBS_COMPAT_VERSIONS",
+    "make_obs_header",
+    "provenance",
+    "config_hash",
+    "PROVENANCE_KEYS",
+    "render_report",
+    "render_prometheus",
+]

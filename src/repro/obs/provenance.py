@@ -1,0 +1,68 @@
+"""Run provenance: the "where did this number come from" header.
+
+Every shipped artifact that carries a measurement — ``BENCH_*.json`` reports
+and obs JSONL streams — embeds the same provenance dict so a reader can tell
+a CPU interpret-mode number from a TPU one, and a stale blob from the rev
+that produced it. ``tools/docs_check.py`` enforces its presence on shipped
+bench JSON.
+"""
+from __future__ import annotations
+
+import datetime
+import hashlib
+import json
+import platform as _platform
+import subprocess
+from typing import Any
+
+__all__ = ["provenance", "PROVENANCE_KEYS"]
+
+# Keys every provenance dict carries (docs_check verifies shipped bench JSON).
+PROVENANCE_KEYS = ("jax", "numpy", "platform", "backend", "device_kind",
+                   "git_rev", "timestamp_utc")
+
+
+def _git_rev() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=str(__file__).rsplit("/src/", 1)[0])
+        rev = out.stdout.strip()
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"],
+            capture_output=True, text=True, timeout=10,
+            cwd=str(__file__).rsplit("/src/", 1)[0]).stdout.strip()
+        return (rev + ("+dirty" if dirty else "")) if rev else "unknown"
+    except Exception:
+        return "unknown"
+
+
+def config_hash(config: Any) -> str:
+    """Short stable hash of an arbitrary JSON-able config object."""
+    blob = json.dumps(config, sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def provenance(config: Any = None) -> dict:
+    """Build the provenance dict; ``config`` (if given) is hashed in as
+    ``config_hash`` so two runs of the same code on different settings are
+    distinguishable without embedding the whole config."""
+    import numpy as np
+    out: dict[str, Any] = {
+        "numpy": np.__version__,
+        "platform": _platform.platform(),
+        "git_rev": _git_rev(),
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }
+    try:
+        import jax
+        out["jax"] = jax.__version__
+        out["backend"] = jax.default_backend()
+        out["device_kind"] = jax.devices()[0].device_kind
+    except Exception:
+        out["jax"] = out["backend"] = out["device_kind"] = "unavailable"
+    if config is not None:
+        out["config_hash"] = config_hash(config)
+    return out

@@ -109,9 +109,14 @@ class ServeEngine:
     """
 
     def __init__(self, cfg: ArchConfig, params, engine: EngineConfig | None = None,
-                 mesh=None):
+                 mesh=None, obs=None):
         self.cfg = cfg
         self.engine = engine or EngineConfig()
+        # optional shared repro.obs.Recorder: engine counters/latency
+        # histograms land there as serve/* series plus a per-step duration
+        # per device program. Host-side only, between device calls — token
+        # streams are bit-identical with obs on or off.
+        self.obs = obs
         b, s = self.engine.max_concurrency, self.engine.max_len
         ring = min(s, cfg.sliding_window) if cfg.sliding_window > 0 else s
         self.ring_size = ring
@@ -206,7 +211,7 @@ class ServeEngine:
         workloads without paying compilation twice."""
         b = self.engine.max_concurrency
         self.scheduler = FCFSScheduler()
-        self.metrics = EngineMetrics()
+        self.metrics = EngineMetrics(recorder=self.obs)
         self._slots: list[RequestState | None] = [None] * b
         self.positions = np.zeros((b,), np.int32)
         self._last_tok = np.zeros((b,), np.int32)
@@ -284,6 +289,8 @@ class ServeEngine:
             rm.finish_step = self._step_count
             self._slots[st.slot] = None  # slot is immediately reusable
             self._temps[st.slot] = 0.0   # don't hold the sampled path open
+            if self.obs is not None:
+                self.metrics.observe_request(rm)
             finished.append(st)
 
     # ------------------------------------------------------------------ step
@@ -296,6 +303,7 @@ class ServeEngine:
         now_step = self._step_count
         self._step_count += 1
         self.metrics.engine_steps += 1
+        t_step0 = self.metrics.now() if self.obs is not None else 0.0
         finished: list[RequestState] = []
 
         # admit() also stamps arrival eligibility on waiting requests, so it
@@ -341,6 +349,7 @@ class ServeEngine:
                     self._emit_token(st, int(tok[st.slot]), finished, first=True)
             self.metrics.prefill_chunks += 1
             self.metrics.touch()
+            self._note_step("prefill", t_step0)
             return finished
 
         if decoding or prefilling:
@@ -378,9 +387,19 @@ class ServeEngine:
                 self._emit_token(st, int(tok[st.slot]), finished)
             self.metrics.decode_steps += 1
             self.metrics.touch()
+            self._note_step("decode", t_step0)
         else:
             self.metrics.idle_steps += 1  # waiting on a future arrival_step
+            self._note_step("idle", t_step0)
         return finished
+
+    def _note_step(self, kind: str, t0: float) -> None:
+        """Flush one step's telemetry at the step boundary (never inside the
+        jitted programs)."""
+        if self.obs is None:
+            return
+        self.obs.duration("serve/step", self.metrics.now() - t0, kind=kind)
+        self.obs.flush()
 
     # ------------------------------------------------------------------- run
     def run(self, requests=None) -> list[RequestState]:

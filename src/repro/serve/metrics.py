@@ -5,13 +5,25 @@ step was reached — queueing delay included) to its first sampled token;
 TPOT is the mean inter-token time over the remaining generated tokens.
 Engine counters track how the work was batched: prefill chunks vs decode
 steps vs idle steps, prompt tokens written and tokens generated.
+
+Since the ``repro.obs`` migration the counters live on a shared
+:class:`repro.obs.Recorder` (``serve/*`` series) so a ``--obs`` run exports
+them alongside per-step spans — but the surface and semantics here are
+unchanged: attribute reads/``+=`` writes work as before (each
+``EngineMetrics`` reads its counters relative to a construction-time
+baseline, so ``ServeEngine.reset()`` still zeroes them while the recorder's
+totals stay monotone), and the active-time clock is bit-for-bit the old
+arithmetic — ``now() = perf_counter() - pause_total`` with ``note_pause``
+crediting deliberate pauses (e.g. a benchmark sleeping off a CPU quota) —
+now provided by :class:`repro.obs.PausableWallClock`.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import numpy as np
+
+from repro.obs import PausableWallClock, Recorder
 
 __all__ = ["RequestMetrics", "EngineMetrics"]
 
@@ -37,30 +49,73 @@ class RequestMetrics:
         return (self.finish_wall - self.first_token_wall) / max(self.n_generated - 1, 1)
 
 
-class EngineMetrics:
-    """Aggregates request records + engine step counters."""
+def _counter(name: str):
+    """Attribute-style view of one ``serve/<name>`` recorder series,
+    baseline-relative so a fresh EngineMetrics starts at 0 on a shared
+    recorder. Supports the engine's ``metrics.x += n`` increments (monotone:
+    counters never decrease within one EngineMetrics lifetime)."""
+    key = f"serve/{name}"
 
-    def __init__(self):
+    def get(self) -> int:
+        return int(self._rec.value(key) - self._base[name])
+
+    def set_(self, value) -> None:
+        delta = value - (self._rec.value(key) - self._base[name])
+        if delta < 0:
+            raise ValueError(f"{name} is a monotone counter (got -{-delta})")
+        if delta:
+            self._rec.counter(key, delta)
+
+    return property(get, set_)
+
+
+class EngineMetrics:
+    """Aggregates request records + engine step counters.
+
+    ``recorder`` (optional) shares a ``repro.obs.Recorder``: counters land
+    there as ``serve/*`` series and finished requests feed the
+    ``serve/ttft_s``/``serve/tpot_s`` histograms. Default is a private
+    recorder on a fresh :class:`repro.obs.PausableWallClock` — exactly the
+    standalone behavior this class always had."""
+
+    _COUNTERS = ("engine_steps", "prefill_chunks", "decode_steps",
+                 "idle_steps", "prompt_tokens", "piggyback_tokens",
+                 "generated_tokens")
+
+    engine_steps = _counter("engine_steps")
+    prefill_chunks = _counter("prefill_chunks")
+    decode_steps = _counter("decode_steps")
+    idle_steps = _counter("idle_steps")
+    prompt_tokens = _counter("prompt_tokens")
+    piggyback_tokens = _counter("piggyback_tokens")   # prompt tokens streamed
+    generated_tokens = _counter("generated_tokens")   # via decode steps
+
+    def __init__(self, recorder: Recorder | None = None):
         self.requests: dict[int, RequestMetrics] = {}
-        self.engine_steps = 0
-        self.prefill_chunks = 0
-        self.decode_steps = 0
-        self.idle_steps = 0
-        self.prompt_tokens = 0
-        self.piggyback_tokens = 0   # prompt tokens streamed via decode steps
-        self.generated_tokens = 0
-        self._pause_total = 0.0
-        self._t0 = time.perf_counter()
+        self._rec = recorder if recorder is not None else Recorder(
+            clock=PausableWallClock())
+        # active-time clock: the recorder's, unless its clock can't credit
+        # pauses (e.g. a shared VirtualClock would be nonsensical here)
+        clk = self._rec.clock
+        self._clock = clk if hasattr(clk, "note_pause") else PausableWallClock()
+        self._base = {n: self._rec.value(f"serve/{n}") for n in self._COUNTERS}
+        self._t0 = self.now()
         self._t_last = self._t0
 
     def now(self) -> float:
         """Active-time clock: wall time minus credited pauses."""
-        return time.perf_counter() - self._pause_total
+        return self._clock.now()
 
     def note_pause(self, dt: float) -> None:
         """Credit a deliberate pause (e.g. a benchmark sleeping off a CPU
         quota) so throughput/latency reflect active time only."""
-        self._pause_total += dt
+        self._clock.note_pause(dt)
+
+    def observe_request(self, rm: RequestMetrics) -> None:
+        """Feed a finished request's latencies into the shared recorder."""
+        self._rec.counter("serve/requests_finished")
+        self._rec.histogram("serve/ttft_s", rm.ttft_s)
+        self._rec.histogram("serve/tpot_s", rm.tpot_s)
 
     def start(self) -> None:
         self._t0 = self.now()

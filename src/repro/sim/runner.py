@@ -100,6 +100,7 @@ from repro.sim.links import (
     segment_wire_bits,
     segment_wire_bits_table,
 )
+from repro.obs import VirtualClock
 from repro.sim.trace import SimTrace, WindowTrace, make_header
 
 __all__ = ["SimConfig", "SimRoundRecord", "SimResult", "AsyncDFedRW"]
@@ -301,6 +302,8 @@ class AsyncDFedRW:
         self.hop_bits = self._hop_bits_table[self._base_bits]
         self._uplink_prev = (0.0, 0.0, 0)    # queued_s, busy_s, sent totals
         self._last_metrics: RoundMetrics | None = None
+        self.obs = None                      # repro.obs.Recorder (attach_obs)
+        self._obs_uplink_prev = (0.0, 0.0, 0)
         self.queue = EventQueue()
         self.t = 0.0
         self._slots: list[_Slot | None] = [None] * cfg.m_chains
@@ -558,6 +561,50 @@ class AsyncDFedRW:
     def init_state(self, key: jax.Array) -> DFedRWState:
         return self.engine.init_state(key)
 
+    # ------------------------------------------------------------ telemetry
+    def attach_obs(self, rec) -> None:
+        """Attach a ``repro.obs.Recorder``; an unbound ``VirtualClock`` is
+        bound to this runner's virtual time, so spans/flushes are priced in
+        virtual seconds and the recorded stream is a pure function of
+        (scenario, seed) — same seed, identical stream, any host. The engine
+        shares the recorder (``engine/*`` series land in the same stream).
+        Host-side only: no event-loop, RNG or engine behavior changes."""
+        self.obs = rec
+        if isinstance(rec.clock, VirtualClock) and not rec.clock.bound:
+            rec.clock.bind(lambda: self.t)
+        self.engine.attach_obs(rec)
+        self._obs_uplink_prev = (0.0, 0.0, 0)
+
+    def _obs_window(self, record: "SimRoundRecord", exec_plan: WalkPlan) -> None:
+        """Per-window telemetry at the aggregation trigger (off-hot-path:
+        after the jitted engine call, before the next window). Deliberately
+        excludes host wall times (``host_loop_s``) — event lines carry only
+        virtual-time/count data, keeping the stream deterministic; wall-clock
+        provenance lives in the stream header."""
+        obs = self.obs
+        obs.record_span("sim/window", record.t_start, record.t_end)
+        obs.record_span("sim/walk", record.t_start, record.t_compute_end)
+        obs.record_span("sim/aggregate", record.t_compute_end, record.t_end)
+        obs.counter("sim/windows")
+        obs.counter("sim/events", record.events)
+        obs.counter("sim/chains_resumed", record.resumed_chains)
+        obs.counter("sim/chains_truncated", record.truncated_chains)
+        obs.counter("sim/chains_dropped", record.dropped_chains)
+        obs.counter("sim/chains_killed", int(record.killed.sum()))
+        obs.histogram("sim/window_steps", exec_plan.k_m)
+        obs.gauge("sim/bits", float(record.bits))
+        queued_s, busy_s, sent, _, _ = self._uplink_totals()
+        pq, pb, ps = self._obs_uplink_prev
+        self._obs_uplink_prev = (queued_s, busy_s, sent)
+        dq, db, ds = queued_s - pq, busy_s - pb, sent - ps
+        if ds:
+            obs.counter("sim/uplink_sent", ds)
+            obs.duration("sim/uplink_busy", db, t=record.t_end)
+            obs.duration("sim/uplink_queued", dq, t=record.t_end)
+        # the AdaptiveBits controller's input signal, window-local
+        obs.gauge("sim/queue_pressure", dq / (dq + db) if (dq + db) > 0 else 0.0)
+        obs.flush(t=record.t_end)
+
     def _reset_timeline(self) -> None:
         """Rewind the virtual timeline for a fresh run on this runner: the
         clock, the chain slots, pending events and uplink queue state all
@@ -576,6 +623,7 @@ class AsyncDFedRW:
         # stateless by contract: their position is the runner's window width)
         self._set_window_bits(self._base_bits)
         self._uplink_prev = (0.0, 0.0, 0)
+        self._obs_uplink_prev = (0.0, 0.0, 0)
         self._last_metrics = None
 
     def _drive(
@@ -678,6 +726,8 @@ class AsyncDFedRW:
                 timestamps=w_ts, bidx=w_bidx, agg_devices=agg[0],
                 agg_rows=agg[1], agg_weights=agg[2],
                 bits=self._window_bits))
+        if self.obs is not None:
+            self._obs_window(record, exec_plan)
         # free finished/killed slots; live chains carry their pending event
         self._release_slots(overlap)
         return new_state, metrics, record

@@ -1,0 +1,132 @@
+"""serve/metrics.py edge cases: the active-time clock, TTFT/TPOT definitions
+and the baseline-relative counter view over a shared ``repro.obs`` recorder.
+
+These semantics predate the obs migration and must survive it bit-for-bit:
+``now() = perf_counter() - pause_total``, TTFT measured from *eligibility*
+(arrival, queueing delay included) not admission, TPOT defined (not a
+division by zero) at ``n_generated <= 1``, idle steps accounted separately
+from work steps, and ``ServeEngine.reset()`` re-zeroing counters while the
+shared recorder's totals stay monotone.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.obs import PausableWallClock, Recorder, VirtualClock
+from repro.serve.metrics import EngineMetrics, RequestMetrics
+
+
+# ----------------------------------------------------------- active clock
+def test_note_pause_credits_active_time():
+    em = EngineMetrics()
+    t0 = em.now()
+    em.note_pause(50.0)
+    assert em.now() < t0 - 49.0
+    em.start()
+    em.note_pause(7.0)
+    em.touch()
+    # a fully-credited pause can only shrink measured wall time
+    assert em.wall_s < 1.0
+
+
+def test_engine_metrics_adopts_recorder_clock():
+    rec = Recorder(clock=PausableWallClock())
+    em = EngineMetrics(recorder=rec)
+    em.note_pause(25.0)
+    # one shared pause ledger: the recorder's clock IS the metrics clock
+    assert em._clock is rec.clock
+    assert abs(em.now() - rec.clock.now()) < 0.5
+
+
+def test_engine_metrics_rejects_pauseless_clock():
+    # a VirtualClock can't credit pauses; metrics fall back to a private
+    # active-time clock instead of crashing on note_pause
+    em = EngineMetrics(recorder=Recorder(clock=VirtualClock(lambda: 5.0)))
+    em.note_pause(1.0)
+    assert em.now() != 5.0
+
+
+# ------------------------------------------------------------- TTFT / TPOT
+def test_ttft_measured_from_eligibility():
+    rm = RequestMetrics(rid=0, eligible_wall=2.0, first_token_wall=5.5,
+                        admit_step=7)
+    assert rm.ttft_s == pytest.approx(3.5)  # queueing delay included
+
+
+def test_tpot_defined_at_one_or_zero_generated():
+    rm = RequestMetrics(rid=0, n_generated=1, first_token_wall=2.0,
+                        finish_wall=2.0)
+    assert rm.tpot_s == 0.0                 # no inter-token gaps yet
+    rm = RequestMetrics(rid=0, n_generated=0, first_token_wall=2.0,
+                        finish_wall=3.0)
+    assert rm.tpot_s == pytest.approx(1.0)  # max(n-1, 1) guard, no ZeroDiv
+    rm = RequestMetrics(rid=0, n_generated=5, first_token_wall=1.0,
+                        finish_wall=3.0)
+    assert rm.tpot_s == pytest.approx(0.5)  # mean over the 4 gaps
+
+
+# ------------------------------------------------------------ idle steps
+def test_idle_steps_accounted():
+    from repro.models import transformer as T
+    from repro.models.config import ArchConfig
+    from repro.serve import EngineConfig, Request, ServeEngine
+
+    cfg = ArchConfig(name="d", n_layers=2, d_model=64, n_heads=4,
+                     n_kv_heads=2, d_ff=128, vocab=64, qkv_bias=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    eng = ServeEngine(cfg, params,
+                      EngineConfig(max_concurrency=2, max_len=32, chunk=8))
+    eng.run([Request(rid=0, prompt=np.arange(4), max_tokens=3, eos_id=-1,
+                     arrival_step=4)])
+    m = eng.metrics
+    assert m.idle_steps >= 4       # steps before the request arrived
+    assert m.engine_steps == m.prefill_chunks + m.decode_steps + m.idle_steps
+
+
+# ------------------------------------- shared recorder, baseline-relative
+def test_counters_baseline_relative_on_shared_recorder():
+    rec = Recorder(clock=PausableWallClock())
+    em1 = EngineMetrics(recorder=rec)
+    em1.engine_steps += 3
+    em1.prompt_tokens += 10
+    # a second EngineMetrics on the SAME recorder starts at zero...
+    em2 = EngineMetrics(recorder=rec)
+    assert em2.engine_steps == 0 and em2.prompt_tokens == 0
+    em2.engine_steps += 2
+    # ...while the recorder's totals stay monotone across lifetimes
+    assert rec.value("serve/engine_steps") == 5.0
+    assert em1.engine_steps == 5   # em1's view includes em2's increments
+
+
+def test_counters_are_monotone():
+    em = EngineMetrics()
+    em.decode_steps += 4
+    with pytest.raises(ValueError, match="monotone"):
+        em.decode_steps = 1
+    em.decode_steps = 4            # no-op write is fine
+    assert em.decode_steps == 4
+
+
+def test_summary_keys_unchanged():
+    em = EngineMetrics()
+    em.start()
+    em.touch()
+    s = em.summary()
+    assert set(s) == {
+        "requests_finished", "engine_steps", "prefill_chunks", "decode_steps",
+        "idle_steps", "prompt_tokens", "piggyback_tokens", "generated_tokens",
+        "wall_s", "tok_s", "total_tok_s", "mean_ttft_s", "p50_ttft_s",
+        "mean_tpot_s",
+    }
+
+
+def test_observe_request_feeds_histograms():
+    rec = Recorder(clock=PausableWallClock())
+    em = EngineMetrics(recorder=rec)
+    em.observe_request(RequestMetrics(rid=0, n_generated=3, eligible_wall=0.0,
+                                      first_token_wall=0.5, finish_wall=1.5))
+    assert rec.value("serve/requests_finished") == 1.0
+    h = rec.summary()["hists"]
+    assert h["serve/ttft_s"]["max"] == pytest.approx(0.5)
+    assert h["serve/tpot_s"]["max"] == pytest.approx(0.5)

@@ -32,12 +32,21 @@
 #                             the kernel qdq tests, and the adaptive
 #                             bits-control loop (pinned parity, zero-retrace
 #                             dispatch, trace schema v2).
+#   tools/check.sh --obs      obs lane: the unified telemetry layer — the
+#                             recorder/stream/report units, the bit-exact
+#                             obs-on-vs-off and deterministic-stream
+#                             invariants, the serve metrics edge cases —
+#                             then an end-to-end smoke: a tiny sim run with
+#                             --obs, rendered through tools/obs_report.py.
 #   tools/check.sh --docs     docs lane: runnable doctests of the repro.sim
-#                             public API, then tools/docs_check.py — a
-#                             link/anchor/code-path checker over README.md,
-#                             ROADMAP.md and docs/*.md that also verifies
-#                             docs/SIMULATOR.md covers every public
-#                             repro.sim symbol and the trace schema version.
+#                             and repro.obs public APIs, then
+#                             tools/docs_check.py — a link/anchor/code-path
+#                             checker over README.md, ROADMAP.md and
+#                             docs/*.md that also verifies docs/SIMULATOR.md
+#                             and docs/OBSERVABILITY.md cover every public
+#                             repro.sim / repro.obs symbol, the schema
+#                             versions, and that every shipped BENCH_*.json
+#                             carries the provenance header.
 #
 # Extra args are forwarded to pytest in all lanes.
 set -euo pipefail
@@ -65,10 +74,20 @@ elif [[ "${1:-}" == "--quant" ]]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
     tests/test_quantize_laws.py tests/test_quantization.py \
     tests/test_kernels_quantize.py tests/test_sim_adapt.py "$@"
+elif [[ "${1:-}" == "--obs" ]]; then
+  shift
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
+    tests/test_obs.py tests/test_serve_metrics.py "$@"
+  tmp="$(mktemp -d)"; trap 'rm -rf "$tmp"' EXIT
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.sim \
+    --scenario uniform_sync --devices 8 --rounds 3 \
+    --obs "$tmp/obs.jsonl" > "$tmp/sim.out"
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python tools/obs_report.py \
+    "$tmp/obs.jsonl"
 elif [[ "${1:-}" == "--docs" ]]; then
   shift
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
-    --doctest-modules src/repro/sim "$@"
+    --doctest-modules src/repro/sim src/repro/obs "$@"
   python tools/docs_check.py
 else
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -m "not slow" "$@"

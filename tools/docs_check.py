@@ -13,8 +13,13 @@ ROADMAP.md and docs/*.md:
    ``src/repro/`` (the paper-map shorthand, e.g. `core/walk.py`). Tokens
    with spaces, globs, ``::`` or no path separator are ignored.
 3. **API coverage**: every name in ``repro.sim.__all__`` (parsed from the
-   package ``__init__.py``, no imports) must appear in docs/SIMULATOR.md,
-   as must the current trace schema version string.
+   package ``__init__.py``, no imports) must appear in docs/SIMULATOR.md —
+   and likewise ``repro.obs.__all__`` in docs/OBSERVABILITY.md — as must
+   the current trace/obs schema version strings.
+
+Plus one pass over shipped artifacts: every ``BENCH_*.json`` at the repo
+root must carry the shared provenance header (``repro.obs.provenance``) so
+a published number is attributable to a backend/device/rev.
 
 Exit status 0 = clean; 1 = problems (all listed).
 """
@@ -112,19 +117,77 @@ def check_sim_api_coverage(problems: list[str]) -> None:
             f"docs/SIMULATOR.md: trace schema version {version} not stated")
 
 
+def check_obs_api_coverage(problems: list[str]) -> None:
+    init = ROOT / "src" / "repro" / "obs" / "__init__.py"
+    doc = ROOT / "docs" / "OBSERVABILITY.md"
+    if not doc.exists():
+        problems.append("docs/OBSERVABILITY.md missing")
+        return
+    names: list[str] = []
+    version = None
+    for node in ast.walk(ast.parse(init.read_text())):
+        if isinstance(node, ast.Assign) and any(
+                getattr(t, "id", "") == "__all__" for t in node.targets):
+            names = [ast.literal_eval(e) for e in node.value.elts]
+    for node in ast.walk(ast.parse(
+            (ROOT / "src" / "repro" / "obs" / "stream.py").read_text())):
+        if isinstance(node, ast.Assign) and any(
+                getattr(t, "id", "") == "OBS_SCHEMA_VERSION"
+                for t in node.targets):
+            version = ast.literal_eval(node.value)
+    text = doc.read_text()
+    for name in names:
+        if name not in text:
+            problems.append(
+                f"docs/OBSERVABILITY.md: public repro.obs symbol {name!r} "
+                f"undocumented")
+    if version is None or f"OBS_SCHEMA_VERSION = {version}" not in text:
+        problems.append(
+            f"docs/OBSERVABILITY.md: obs schema version {version} not stated")
+
+
+# Every shipped benchmark artifact must say where its numbers came from.
+PROVENANCE_REQUIRED = (
+    "jax", "numpy", "platform", "device_kind", "git_rev", "timestamp_utc")
+
+
+def check_bench_provenance(problems: list[str]) -> None:
+    import json
+
+    for path in sorted(ROOT.glob("BENCH_*.json")):
+        rel = path.relative_to(ROOT)
+        try:
+            report = json.loads(path.read_text())
+        except json.JSONDecodeError as e:
+            problems.append(f"{rel}: invalid JSON ({e})")
+            continue
+        prov = report.get("provenance")
+        if not isinstance(prov, dict):
+            problems.append(
+                f"{rel}: missing provenance header (run "
+                f"benchmarks.run.stamp_provenance)")
+            continue
+        missing = [k for k in PROVENANCE_REQUIRED if k not in prov]
+        if missing:
+            problems.append(f"{rel}: provenance missing keys {missing}")
+
+
 def main() -> int:
     problems: list[str] = []
     for path in DOC_FILES:
         check_links(path, problems)
         check_code_paths(path, problems)
     check_sim_api_coverage(problems)
+    check_obs_api_coverage(problems)
+    check_bench_provenance(problems)
     if problems:
         print(f"docs_check: {len(problems)} problem(s)")
         for p in problems:
             print(f"  {p}")
         return 1
     print(f"docs_check: {len(DOC_FILES)} files clean "
-          f"(links, anchors, code paths, repro.sim API coverage)")
+          f"(links, anchors, code paths, repro.sim/repro.obs API coverage, "
+          f"BENCH provenance)")
     return 0
 
 

@@ -1,0 +1,38 @@
+#!/usr/bin/env python
+"""Render a recorded repro.obs JSONL stream as a human run report.
+
+Usage:
+  python tools/obs_report.py obs.jsonl            # run report
+  python tools/obs_report.py obs.jsonl --prom     # Prometheus text dump
+
+Streams come from any launcher's --obs flag:
+  PYTHONPATH=src python -m repro.launch.sim --scenario straggler_tail \\
+      --rounds 10 --obs obs.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.obs import ObsStream, render_prometheus, render_report  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("path", help="recorded obs JSONL stream")
+    ap.add_argument("--prom", action="store_true",
+                    help="emit a Prometheus text dump instead of the report")
+    args = ap.parse_args(argv)
+    stream = ObsStream.load(args.path)
+    render = render_prometheus if args.prom else render_report
+    sys.stdout.write(render(stream))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
