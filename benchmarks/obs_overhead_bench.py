@@ -3,15 +3,16 @@
 The telemetry contract (docs/OBSERVABILITY.md) is that recording is off the
 hot path: host-side bookkeeping at window boundaries only, bit-exact outputs,
 and round wall time within 5% of an uninstrumented run on the bench config.
-This module measures and ENFORCES that — two identical runners (one with a
-virtual-clock Recorder attached) execute the same scenario with the same
-PRNG key sequence, params/virtual-time are compared bit-for-bit at the end,
-and the run raises (failing benchmarks/run.py) if the measured overhead
-exceeds the budget.
+This module measures and ENFORCES that — three identical runners (bare, with
+a virtual-clock Recorder, and with the Recorder in --trace mode emitting
+causal tspan trees) execute the same scenario with the same PRNG key
+sequence, params/virtual-time are compared bit-for-bit at the end, and the
+run raises (failing benchmarks/run.py) if either instrumented arm exceeds
+the budget over the bare arm.
 
 Timing protocol matches round_engine_bench's interleaved per-round pairs:
 this container is cgroup CPU-throttled, so a short sleep before each timed
-pair lets the quota refill, the two arms alternate within a pair to share
+group lets the quota refill, the arms rotate order within a group to share
 any residual throttle, and the per-arm MIN over all rounds approximates the
 unthrottled round latency (medians also reported). Results go to
 BENCH_obs_overhead.json at the repo root.
@@ -36,12 +37,12 @@ OVERHEAD_BUDGET = 1.05
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_obs_overhead.json")
 
 
-def _arm(obs: bool):
+def _arm(mode: str):
     setup = build_scenario(SCENARIO, n=N_DEV, seed=0, rounds=ROUNDS)
     runner = setup.runner()
     rec = None
-    if obs:
-        rec = Recorder(clock=VirtualClock())
+    if mode != "off":
+        rec = Recorder(clock=VirtualClock(), trace=(mode == "trace"))
         runner.attach_obs(rec)
     runner._reset_timeline()
     state = runner.init_state(jax.random.PRNGKey(0))
@@ -59,63 +60,78 @@ def _round(a, timed: bool) -> None:
 
 
 def run() -> None:
-    arms = {"obs_off": _arm(False), "obs_on": _arm(True)}
+    arms = {"obs_off": _arm("off"), "obs_on": _arm("on"),
+            "obs_trace": _arm("trace")}
     # Warmup round per arm: compiles the round program outside the timed
-    # region (both arms run the same executable — attach_obs compiles
+    # region (all arms run the same executable — attach_obs compiles
     # nothing; the key streams stay aligned because obs consumes no RNG).
     for a in arms.values():
         _round(a, timed=False)
-    order = [arms["obs_off"], arms["obs_on"]]
+    order = [arms["obs_off"], arms["obs_on"], arms["obs_trace"]]
     for r in range(ROUNDS):
-        time.sleep(0.15)  # let the cgroup CPU quota refill
-        # alternate which arm runs first after the refill, so neither arm
+        time.sleep(0.25)  # let the cgroup CPU quota refill (3 arms/group)
+        # rotate which arm runs first after the refill, so no arm
         # systematically inherits the fresher quota / warmer caches
-        for a in (order if r % 2 == 0 else order[::-1]):
+        k = r % len(order)
+        for a in order[k:] + order[:k]:
             _round(a, timed=True)
 
     _check_exact(arms)
-    ms_off = float(np.min(arms["obs_off"]["times"]) * 1e3)
-    ms_on = float(np.min(arms["obs_on"]["times"]) * 1e3)
-    ratio = ms_on / ms_off
+    ms = {name: float(np.min(a["times"]) * 1e3) for name, a in arms.items()}
+    ratio = ms["obs_on"] / ms["obs_off"]
+    ratio_trace = ms["obs_trace"] / ms["obs_off"]
     rec = arms["obs_on"]["rec"]
+    rec_tr = arms["obs_trace"]["rec"]
+    tspans = sum(1 for ev in rec_tr.events if ev.get("kind") == "tspan")
     report = {
         "config": {"scenario": SCENARIO, "n": N_DEV, "rounds": ROUNDS,
                    "overhead_budget": OVERHEAD_BUDGET},
-        "ms_per_round_min_obs_off": ms_off,
-        "ms_per_round_min_obs_on": ms_on,
+        "ms_per_round_min_obs_off": ms["obs_off"],
+        "ms_per_round_min_obs_on": ms["obs_on"],
+        "ms_per_round_min_obs_trace": ms["obs_trace"],
         "ms_per_round_median_obs_off": float(np.median(arms["obs_off"]["times"]) * 1e3),
         "ms_per_round_median_obs_on": float(np.median(arms["obs_on"]["times"]) * 1e3),
+        "ms_per_round_median_obs_trace": float(np.median(arms["obs_trace"]["times"]) * 1e3),
         "overhead_ratio": ratio,
-        "within_budget": ratio <= OVERHEAD_BUDGET,
+        "overhead_ratio_trace": ratio_trace,
+        "within_budget": ratio <= OVERHEAD_BUDGET and ratio_trace <= OVERHEAD_BUDGET,
         "params_bit_exact": True,   # _check_exact raised otherwise
         "trace_count_obs_on": arms["obs_on"]["runner"].engine.trace_count,
         "trace_count_obs_off": arms["obs_off"]["runner"].engine.trace_count,
+        "trace_count_obs_trace": arms["obs_trace"]["runner"].engine.trace_count,
         "obs_events_total": len(rec.events),
-        "notes": "CPU numbers; interleaved per-round pairs, min over rounds "
-                 "(quota-refill sleeps), same PRNG key sequence both arms",
+        "obs_trace_tspan_events": tspans,
+        "notes": "CPU numbers; interleaved per-round groups, min over rounds "
+                 "(quota-refill sleeps), same PRNG key sequence all arms",
     }
     with open(OUT_PATH, "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")
-    emit("obs_overhead_off", ms_off * 1e3, "ms_per_round=%.3f" % ms_off)
-    emit("obs_overhead_on", ms_on * 1e3, "ratio=%.4f" % ratio)
-    if ratio > OVERHEAD_BUDGET:
-        raise RuntimeError(
-            f"obs overhead {ratio:.3f}x exceeds the {OVERHEAD_BUDGET:.2f}x "
-            f"budget (obs-on {ms_on:.2f}ms vs obs-off {ms_off:.2f}ms per "
-            f"round)")
+    emit("obs_overhead_off", ms["obs_off"] * 1e3,
+         "ms_per_round=%.3f" % ms["obs_off"])
+    emit("obs_overhead_on", ms["obs_on"] * 1e3, "ratio=%.4f" % ratio)
+    emit("obs_overhead_trace", ms["obs_trace"] * 1e3,
+         "ratio=%.4f" % ratio_trace)
+    for name, r in (("obs", ratio), ("trace", ratio_trace)):
+        if r > OVERHEAD_BUDGET:
+            raise RuntimeError(
+                f"{name} overhead {r:.3f}x exceeds the "
+                f"{OVERHEAD_BUDGET:.2f}x budget (vs obs-off "
+                f"{ms['obs_off']:.2f}ms per round)")
 
 
 def _check_exact(arms: dict) -> None:
     p_off = np.asarray(arms["obs_off"]["state"].device_params)
-    p_on = np.asarray(arms["obs_on"]["state"].device_params)
-    if not np.array_equal(p_off, p_on):
-        raise RuntimeError("obs-on params diverged from obs-off: recording "
-                           "must not touch the compute path")
-    t_off = arms["obs_off"]["runner"].t
-    t_on = arms["obs_on"]["runner"].t
-    if t_off != t_on:
-        raise RuntimeError(f"obs-on virtual time {t_on} != obs-off {t_off}")
+    for name in ("obs_on", "obs_trace"):
+        p = np.asarray(arms[name]["state"].device_params)
+        if not np.array_equal(p_off, p):
+            raise RuntimeError(f"{name} params diverged from obs-off: "
+                               f"recording must not touch the compute path")
+        t_off = arms["obs_off"]["runner"].t
+        t_arm = arms[name]["runner"].t
+        if t_off != t_arm:
+            raise RuntimeError(f"{name} virtual time {t_arm} != obs-off "
+                               f"{t_off}")
 
 
 if __name__ == "__main__":

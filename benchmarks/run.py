@@ -57,12 +57,55 @@ def stamp_provenance() -> list[str]:
     return stamped
 
 
+def snapshot_bench() -> str | None:
+    """Copy the committed BENCH_*.json aside before the sweep overwrites
+    them, so the perf trajectory (old vs new numbers) can be diffed after."""
+    import glob
+    import shutil
+    import tempfile
+
+    paths = sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json")))
+    if not paths:
+        return None
+    snap = tempfile.mkdtemp(prefix="bench_prev_")
+    for p in paths:
+        shutil.copy(p, snap)
+    return snap
+
+
+def diff_bench(snap: str | None) -> None:
+    """Perf trajectory table: tools/obs_diff.py (--warn-only) of each
+    refreshed BENCH_*.json against its pre-sweep snapshot. Report-only —
+    a regression past threshold prints loudly but never fails the sweep;
+    gating lives in the modules' own budgets (e.g. obs_overhead_bench)."""
+    import glob
+    import shutil
+    import subprocess
+
+    if snap is None:
+        return
+    tool = os.path.join(ROOT, "tools", "obs_diff.py")
+    try:
+        for path in sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json"))):
+            name = os.path.basename(path)
+            prev = os.path.join(snap, name)
+            if not os.path.exists(prev):
+                print(f"# perf trajectory: {name} is new (no baseline)")
+                continue
+            print(f"# perf trajectory: {name} (old -> new)", flush=True)
+            subprocess.run([sys.executable, tool, prev, path, "--warn-only",
+                            "--top", "8"], check=False)
+    finally:
+        shutil.rmtree(snap, ignore_errors=True)
+
+
 def main() -> None:
     sel = sys.argv[1:]
     picked = [m for m in MODULES if not sel or any(s in m for s in sel)]
     if os.environ.get("REPRO_BENCH_SKIP_DRYRUN"):
         picked = [m for m in picked if m != "pod_gossip_roofline"]
     failed = []
+    snap = snapshot_bench()
     print("name,us_per_call,derived")
     for mod in picked:
         t0 = time.time()
@@ -74,6 +117,7 @@ def main() -> None:
             traceback.print_exc()
     stamped = stamp_provenance()
     print(f"# provenance stamped into {stamped}")
+    diff_bench(snap)
     if failed:
         print(f"# FAILED: {failed}")
         sys.exit(1)

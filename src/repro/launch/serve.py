@@ -114,6 +114,10 @@ def main(argv=None) -> None:
     ap.add_argument("--obs", default="",
                     help="record a repro.obs telemetry stream (JSONL) here "
                          "(report: python tools/obs_report.py <path>)")
+    ap.add_argument("--trace", action="store_true",
+                    help="with --obs: record per-request causal span trees "
+                         "(admit/prefill_chunk/decode tspan events; export: "
+                         "python tools/obs_trace_export.py <obs.jsonl>)")
     args = ap.parse_args(argv)
 
     import jax
@@ -132,10 +136,13 @@ def main(argv=None) -> None:
     n_dev = len(jax.devices())
     mesh = make_host_mesh(data=max(n_dev // args.mesh_model, 1), model=args.mesh_model)
 
+    if args.trace and not args.obs:
+        raise SystemExit("--trace requires --obs (it augments the obs "
+                         "stream with tspan events)")
     obs = None
     if args.obs:
         from repro.obs import PausableWallClock, Recorder
-        obs = Recorder(clock=PausableWallClock())
+        obs = Recorder(clock=PausableWallClock(), trace=args.trace)
 
     reqs = build_requests(args, cfg)
     eng = ServeEngine(cfg, params, EngineConfig(

@@ -76,6 +76,14 @@ def main(argv=None) -> None:
                     help="record a repro.obs telemetry stream (JSONL) here — "
                          "virtual-clock spans/counters, deterministic per "
                          "seed (report: python tools/obs_report.py <path>)")
+    ap.add_argument("--trace", nargs="?", const="auto", default="",
+                    choices=["auto", "full", "coarse"],
+                    help="with --obs: also record causal span trees (schema "
+                         "v2 tspan events) — per hop/sgd/transfer/queue_wait/"
+                         "churn_wait/aggregate span with trace & parent ids. "
+                         "'auto' coarsens to per-chain-per-window envelopes "
+                         "past TRACE_COARSE_LIMIT chain-steps; export: "
+                         "python tools/obs_trace_export.py <obs.jsonl>")
     args = ap.parse_args(argv)
 
     from repro.sim import build_scenario, list_scenarios
@@ -87,12 +95,24 @@ def main(argv=None) -> None:
 
     import jax
 
+    if args.trace and not args.obs:
+        raise SystemExit("--trace requires --obs (it augments the obs "
+                         "stream with tspan events)")
+    if args.trace and args.replay:
+        raise SystemExit("--trace is not available under --replay: the flat "
+                         "replay engine skips the device/link timeline that "
+                         "spans are built from — re-simulate instead")
+
     def _attach_obs(runner):
         if not args.obs:
             return None
         from repro.obs import Recorder, VirtualClock
-        rec = Recorder(clock=VirtualClock())
-        runner.attach_obs(rec)
+        rec = Recorder(clock=VirtualClock(), trace=bool(args.trace))
+        if args.trace:
+            runner.attach_obs(rec, trace=(True if args.trace == "auto"
+                                          else args.trace))
+        else:
+            runner.attach_obs(rec)
         return rec
 
     def _save_obs(rec, setup) -> None:

@@ -56,12 +56,18 @@ def protocol_main(args) -> None:
             local_epochs=args.epochs, straggler=strag, quant=quant))
 
     rec = None
+    if args.trace and not args.obs:
+        raise SystemExit("--trace requires --obs (it augments the obs "
+                         "stream with tspan events)")
     if args.obs:
         if not hasattr(runner, "attach_obs"):
             raise SystemExit(f"--obs: --algo {args.algo} exposes no telemetry "
                              f"hooks (supported: dfedrw)")
         from repro.obs import Recorder
-        rec = Recorder()   # wall clock: per-round engine spans + Eq. 18 bits
+        # wall clock: per-round engine spans + Eq. 18 bits. --trace marks the
+        # stream trace-capable; the protocol engine itself emits no tspans
+        # (causal span trees come from the simulator/serving timelines).
+        rec = Recorder(trace=args.trace)
         runner.attach_obs(rec)
 
     def cb(r, metrics, evald):
@@ -186,6 +192,11 @@ def main(argv=None) -> None:
     p.add_argument("--obs", default="",
                    help="record a repro.obs telemetry stream (JSONL) here "
                         "(report: python tools/obs_report.py <path>)")
+    p.add_argument("--trace", action="store_true",
+                   help="with --obs: mark the stream trace-capable (schema "
+                        "v2). The protocol engine emits no tspan events — "
+                        "use the simulator (launch.sim --trace) or serving "
+                        "(launch.serve --trace) for causal span trees")
     q = sub.add_parser("pod")
     q.add_argument("--arch", required=True)
     q.add_argument("--smoke", action="store_true")

@@ -15,12 +15,16 @@ Quickstart::
     rec.save("obs.jsonl", provenance=provenance())
     # then: python tools/obs_report.py obs.jsonl
 """
+from .critical import (WindowCriticalPath, critical_paths, render_critical,
+                       straggler_table)
 from .provenance import PROVENANCE_KEYS, config_hash, provenance
 from .recorder import (HIST_RESERVOIR, PausableWallClock, Recorder,
-                       VirtualClock, WallClock, jax_profile)
+                       VirtualClock, WallClock, jax_profile, quantile_line)
 from .report import render_prometheus, render_report
 from .stream import (OBS_COMPAT_VERSIONS, OBS_SCHEMA, OBS_SCHEMA_VERSION,
                      ObsStream, make_obs_header)
+from .trace import (SPAN_KINDS, TRACE_COARSE_LIMIT, TraceSpan, TraceTree,
+                    build_trees, emit_walk_window, spans_of)
 
 __all__ = [
     "Recorder",
@@ -29,6 +33,7 @@ __all__ = [
     "VirtualClock",
     "jax_profile",
     "HIST_RESERVOIR",
+    "quantile_line",
     "ObsStream",
     "OBS_SCHEMA",
     "OBS_SCHEMA_VERSION",
@@ -39,4 +44,15 @@ __all__ = [
     "PROVENANCE_KEYS",
     "render_report",
     "render_prometheus",
+    "SPAN_KINDS",
+    "TRACE_COARSE_LIMIT",
+    "TraceSpan",
+    "TraceTree",
+    "spans_of",
+    "build_trees",
+    "emit_walk_window",
+    "WindowCriticalPath",
+    "critical_paths",
+    "straggler_table",
+    "render_critical",
 ]

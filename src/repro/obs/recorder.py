@@ -20,12 +20,19 @@ instrumented runs are bit-exact with uninstrumented ones.
 Counters are monotone; ``flush()`` emits the *delta* since the previous flush
 so the event stream doubles as a time series. Histograms keep exact aggregate
 moments (count/sum/min/max) plus a deterministic bounded sample reservoir
-(first ``HIST_RESERVOIR`` values) for percentile reporting.
+(strided thinning with stride doubling, so the kept ``< HIST_RESERVOIR``
+samples cover the whole run) for percentile reporting.
+
+``trace_span`` records *causal* spans — nodes of the per-chain / per-request
+span trees built by ``repro.obs.trace`` — carrying a trace id, a span id and
+an optional parent id on top of the ``[t0, t1]`` interval.
 """
 from __future__ import annotations
 
 import contextlib
+import operator
 import time
+import warnings
 from typing import Any, Callable, Iterator
 
 __all__ = [
@@ -96,8 +103,30 @@ def _key(name: str, labels: dict[str, Any]) -> str:
     return f"{name}{{{inner}}}"
 
 
+def _attr_value(v: Any):
+    """Normalize a trace-span attribute to a JSON scalar (int, float or str),
+    so event lines never depend on host-side numpy scalar reprs."""
+    if isinstance(v, str):
+        return v
+    if isinstance(v, bool):
+        return int(v)
+    try:
+        return operator.index(v)       # int and numpy integer types
+    except TypeError:
+        return float(v)
+
+
+def quantile_line(base: str, q: str) -> str:
+    """Splice ``quantile="q"`` into a Prometheus metric that may already carry
+    a label set: ``m`` -> ``m{quantile="q"}``, ``m{a="b"}`` ->
+    ``m{a="b",quantile="q"}``."""
+    if base.endswith("}"):
+        return f'{base[:-1]},quantile="{q}"}}'
+    return f'{base}{{quantile="{q}"}}'
+
+
 class _Hist:
-    __slots__ = ("count", "total", "vmin", "vmax", "samples")
+    __slots__ = ("count", "total", "vmin", "vmax", "samples", "stride")
 
     def __init__(self) -> None:
         self.count = 0
@@ -105,18 +134,26 @@ class _Hist:
         self.vmin = float("inf")
         self.vmax = float("-inf")
         self.samples: list[float] = []
+        # Deterministic strided thinning: the reservoir holds exactly the
+        # observations whose global index is ≡ 0 (mod stride); when it fills,
+        # every other kept sample is dropped and the stride doubles. No RNG,
+        # and percentiles cover the whole run instead of just its start.
+        self.stride = 1
 
     def observe_many(self, values) -> None:
         vals = [float(v) for v in values]
         if not vals:
             return
+        n_before = self.count
         self.count += len(vals)
         self.total += sum(vals)
         self.vmin = min(self.vmin, min(vals))
         self.vmax = max(self.vmax, max(vals))
-        room = HIST_RESERVOIR - len(self.samples)
-        if room > 0:
-            self.samples.extend(vals[:room])
+        first = (-n_before) % self.stride
+        self.samples.extend(vals[first::self.stride])
+        while len(self.samples) >= HIST_RESERVOIR:
+            self.samples = self.samples[::2]
+            self.stride *= 2
 
     def summary(self) -> dict:
         if not self.count:
@@ -146,8 +183,10 @@ class Recorder:
     640.0
     """
 
-    def __init__(self, clock: WallClock | VirtualClock | None = None) -> None:
+    def __init__(self, clock: WallClock | VirtualClock | None = None,
+                 trace: bool = False) -> None:
         self.clock = clock if clock is not None else WallClock()
+        self.trace_enabled = bool(trace)
         self.events: list[dict] = []
         self._counters: dict[str, float] = {}
         self._flushed: dict[str, float] = {}
@@ -155,6 +194,25 @@ class Recorder:
         self._gauges_dirty = False
         self._spans: dict[str, list[float]] = {}   # key -> [count, total_s]
         self._hists: dict[str, _Hist] = {}
+        self._hists_dirty: set[str] = set()
+        self._clock_unbound = False
+        self._trace_coarse = False
+
+    def _clock_check(self) -> None:
+        """One-shot warning when spans are recorded against an unbound
+        ``VirtualClock`` — every timestamp would silently read 0.0. The
+        condition is also flagged as ``clock_unbound`` in the stream header."""
+        if self._clock_unbound:
+            return
+        clk = self.clock
+        if isinstance(clk, VirtualClock) and not clk.bound:
+            self._clock_unbound = True
+            warnings.warn(
+                "Recorder clock is an unbound VirtualClock: span timestamps "
+                "read 0.0. Bind it (clock.bind(lambda: runner.t) — "
+                "AsyncDFedRW.attach_obs does this) before recording; the "
+                "stream header will carry clock_unbound=true.",
+                stacklevel=3)
 
     # -- counters / gauges / histograms ---------------------------------
     def counter(self, name: str, inc: float = 1, **labels: Any) -> None:
@@ -174,6 +232,7 @@ class Recorder:
     def histogram(self, name: str, value, **labels: Any) -> None:
         """Observe a value (or an array of values) into a distribution."""
         k = _key(name, labels)
+        self._hists_dirty.add(k)
         h = self._hists.get(k)
         if h is None:
             h = self._hists[k] = _Hist()
@@ -187,6 +246,7 @@ class Recorder:
     @contextlib.contextmanager
     def span(self, name: str, **labels: Any) -> Iterator[None]:
         """Time a block on this recorder's clock; nests freely."""
+        self._clock_check()
         t0 = self.clock.now()
         try:
             yield
@@ -197,6 +257,7 @@ class Recorder:
                     **labels: Any) -> None:
         """Record an explicit ``[t0, t1]`` interval (clock already read by the
         caller — how the sim prices windows in virtual seconds)."""
+        self._clock_check()
         k = _key(name, labels)
         agg = self._spans.get(k)
         if agg is None:
@@ -210,6 +271,7 @@ class Recorder:
                  **labels: Any) -> None:
         """Record an elapsed duration without interval endpoints (e.g. uplink
         busy-time deltas, per-step serve timings)."""
+        self._clock_check()
         k = _key(name, labels)
         agg = self._spans.get(k)
         if agg is None:
@@ -220,6 +282,47 @@ class Recorder:
                             "t": float(self.clock.now() if t is None else t),
                             "dur": float(seconds)})
 
+    # -- causal trace spans ----------------------------------------------
+    def trace_span(self, kind: str, *, trace: str, span: str,
+                   t0: float, t1: float, parent: str | None = None,
+                   **attrs: Any) -> None:
+        """Record one node of a causal span tree (``repro.obs.trace``).
+
+        ``trace`` groups spans into one tree (chain ``c<uid>``, aggregation
+        window ``w<win>``, serve request ``r<rid>``); ``span`` is the node id
+        and ``parent`` its causal predecessor within the same trace (``None``
+        for roots). ``kind`` is one of ``repro.obs.SPAN_KINDS``. Attrs are
+        flattened onto the event line (ints/floats/strings only). Totals also
+        aggregate into the ``trace/<kind>`` span series, so summaries and
+        Prometheus dumps carry per-kind counts/seconds without replaying the
+        event list.
+
+        >>> rec = Recorder(clock=VirtualClock(lambda: 9.0), trace=True)
+        >>> rec.trace_span("sgd", trace="c0", span="c0.s0", parent="c0.h0",
+        ...                t0=1.0, t1=3.5, win=0, dev=4)
+        >>> rec.events[-1]["span"], rec.summary()["spans"]["trace/sgd"]
+        ('c0.s0', {'count': 1, 'total_s': 2.5})
+        """
+        self._clock_check()
+        agg = self._spans.get(f"trace/{kind}")
+        if agg is None:
+            agg = self._spans[f"trace/{kind}"] = [0, 0.0]
+        agg[0] += 1
+        agg[1] += float(t1) - float(t0)
+        ev: dict[str, Any] = {"kind": "tspan", "sk": str(kind),
+                              "trace": str(trace), "span": str(span),
+                              "t0": float(t0), "t1": float(t1)}
+        if parent is not None:
+            ev["parent"] = str(parent)
+        for k in sorted(attrs):
+            ev[k] = _attr_value(attrs[k])
+        self.events.append(ev)
+
+    def note_trace_coarse(self) -> None:
+        """Flag that trace emission coarsened per-chain spans to window
+        envelopes (fleet engine at scale); lands in the stream header."""
+        self._trace_coarse = True
+
     # -- flush / export --------------------------------------------------
     def flush(self, t: float | None = None) -> None:
         """Emit one event with counter *deltas* since the previous flush and
@@ -228,7 +331,10 @@ class Recorder:
         deltas = {}
         for k in self._counters:
             d = self._counters[k] - self._flushed.get(k, 0.0)
-            if d:
+            # a series' first flush emits even a zero delta, so a stream cut
+            # before the summary still knows the counter exists (the report
+            # rebuild shows "0" rather than dropping the row)
+            if d or k not in self._flushed:
                 deltas[k] = d
                 self._flushed[k] = self._counters[k]
         ev: dict[str, Any] = {}
@@ -237,10 +343,17 @@ class Recorder:
         if self._gauges_dirty:
             ev["gauges"] = {k: self._gauges[k] for k in sorted(self._gauges)}
             self._gauges_dirty = False
+        if self._hists_dirty:
+            # Snapshot summaries of histograms touched since the last flush,
+            # so a stream cut mid-run still rebuilds distribution tails.
+            ev["hists"] = {k: self._hists[k].summary()
+                           for k in sorted(self._hists_dirty)}
+            self._hists_dirty.clear()
         if not ev:
             return
         ev["kind"] = "flush"
         ev["t"] = float(self.clock.now() if t is None else t)
+        self._clock_check()
         self.events.append(ev)
 
     def summary(self) -> dict:
@@ -258,8 +371,15 @@ class Recorder:
         """Freeze into an ``ObsStream`` (flushes pending counters first)."""
         from .stream import ObsStream, make_obs_header
         self.flush()
+        flags: dict[str, Any] = {}
+        if self.trace_enabled:
+            flags["trace"] = True
+        if self._trace_coarse:
+            flags["trace_coarse"] = True
+        if self._clock_unbound:
+            flags["clock_unbound"] = True
         header = make_obs_header(clock=self.clock.kind,
-                                 provenance=provenance, **context)
+                                 provenance=provenance, **flags, **context)
         return ObsStream(header=header, events=list(self.events),
                          summary=self.summary())
 
@@ -285,6 +405,13 @@ class Recorder:
         for k, h in sorted(self._hists.items()):
             lines.append(f"{metric(k, '_count')} {h.count}")
             lines.append(f"{metric(k, '_sum')} {h.total:g}")
+            if h.count:
+                s = h.summary()
+                for q, key in (("0.5", "p50"), ("0.9", "p90"),
+                               ("0.99", "p99")):
+                    lines.append(f"{quantile_line(metric(k), q)} {s[key]:g}")
+                lines.append(f"{metric(k, '_min')} {h.vmin:g}")
+                lines.append(f"{metric(k, '_max')} {h.vmax:g}")
         return "\n".join(lines) + "\n"
 
 

@@ -12,6 +12,9 @@ from __future__ import annotations
 import re
 from typing import Any
 
+from .critical import render_critical
+from .recorder import quantile_line
+
 __all__ = ["render_report", "render_prometheus"]
 
 _KEY_RE = re.compile(r'^(?P<name>[^{]+)(?:\{(?P<labels>.*)\})?$')
@@ -34,17 +37,26 @@ def _aggregates(stream) -> dict:
     counters: dict[str, float] = {}
     gauges: dict[str, float] = {}
     spans: dict[str, dict] = {}
+    hists: dict[str, dict] = {}
     for ev in stream.events:
         kind = ev.get("kind")
         if kind == "flush":
             for k, v in ev.get("counters", {}).items():
                 counters[k] = counters.get(k, 0.0) + v
             gauges.update(ev.get("gauges", {}))
+            # flush hist snapshots are cumulative: last one wins (schema v2)
+            hists.update(ev.get("hists", {}))
         elif kind in ("span", "dur"):
             agg = spans.setdefault(ev["name"], {"count": 0, "total_s": 0.0})
             agg["count"] += 1
             agg["total_s"] += (ev["t1"] - ev["t0"]) if kind == "span" else ev["dur"]
-    return {"counters": counters, "gauges": gauges, "spans": spans, "hists": {}}
+        elif kind == "tspan":
+            agg = spans.setdefault("trace/" + ev["sk"],
+                                   {"count": 0, "total_s": 0.0})
+            agg["count"] += 1
+            agg["total_s"] += ev["t1"] - ev["t0"]
+    return {"counters": counters, "gauges": gauges, "spans": spans,
+            "hists": hists}
 
 
 def _time_extent(stream, spans: dict) -> float:
@@ -162,6 +174,12 @@ def render_report(stream) -> str:
         out.append("distributions (straggler/latency tails):")
         out += _table(rows, ["histogram", "count", "mean", "p50", "p90",
                              "p99", "max"])
+
+    # -- critical path (why was this window slow?) ----------------------
+    crit = render_critical(stream)
+    if crit:
+        out.append("")
+        out += crit
     return "\n".join(out) + "\n"
 
 
@@ -187,4 +205,9 @@ def render_prometheus(stream) -> str:
         v = agg["hists"][k]
         lines.append(f"{metric(k, '_count')} {v.get('count', 0)}")
         lines.append(f"{metric(k, '_sum')} {v.get('sum', 0.0):g}")
+        if v.get("count"):
+            for q, key in (("0.5", "p50"), ("0.9", "p90"), ("0.99", "p99")):
+                lines.append(f"{quantile_line(metric(k), q)} {v[key]:g}")
+            lines.append(f"{metric(k, '_min')} {v['min']:g}")
+            lines.append(f"{metric(k, '_max')} {v['max']:g}")
     return "\n".join(lines) + "\n"

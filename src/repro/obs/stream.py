@@ -1,20 +1,32 @@
 """Versioned JSONL telemetry streams (the obs analogue of ``sim/trace.py``).
 
-JSONL schema (version 1)
+JSONL schema (version 2)
 ------------------------
 Line 1 is the header; every further line is one event; the final line is the
 whole-recording summary:
 
-    {"schema": "repro.obs", "version": 1, "clock": "virtual"|"wall"|...,
+    {"schema": "repro.obs", "version": 2, "clock": "virtual"|"wall"|...,
      ...optional: "provenance": {...}, launcher context ("workload",
-     "scenario", "arch", ...)...}
+     "scenario", "arch", ...), flags ("trace", "trace_coarse",
+     "clock_unbound")...}
 
     {"kind": "span", "name": 'sim/window', "t0": 0.0, "t1": 9.3}
     {"kind": "dur", "name": 'sim/uplink_busy', "t": 9.3, "dur": 4.1}
-    {"kind": "flush", "t": 9.3, "counters": {delta...}, "gauges": {...}}
+    {"kind": "tspan", "sk": "sgd", "trace": "c3", "span": "c3.s2",
+     "parent": "c3.h2", "t0": 4.1, "t1": 9.3, ...flat attrs ("win",
+     "dev", ...)}
+    {"kind": "flush", "t": 9.3, "counters": {delta...}, "gauges": {...},
+     "hists": {name: summary-so-far...}}
 
     {"kind": "summary", "counters": {totals...}, "gauges": {...},
      "spans": {name: {"count": N, "total_s": S}}, "hists": {name: {...}}}
+
+Version 2 adds (a) ``tspan`` causal trace spans (``repro.obs.trace``) —
+``trace`` is the trace id (chain ``c<uid>``, aggregation window ``w<win>``,
+serve request ``r<rid>``), ``span``/``parent`` the span-tree edges, ``sk``
+the span kind; (b) histogram snapshots on flush lines, so a stream cut
+mid-run still rebuilds distribution tails; (c) the header flags above.
+Version 1 streams (no tspans, no flush hists) stay readable.
 
 Series names encode labels Prometheus-style: ``engine/comm_bits{bits="8"}``.
 Timestamps are priced by the recorder's clock (see header ``clock``); for the
@@ -49,9 +61,9 @@ __all__ = [
 ]
 
 OBS_SCHEMA = "repro.obs"
-OBS_SCHEMA_VERSION = 1
+OBS_SCHEMA_VERSION = 2
 # Versions from_lines still reads.
-OBS_COMPAT_VERSIONS = (1,)
+OBS_COMPAT_VERSIONS = (1, 2)
 
 
 def make_obs_header(*, clock: str, provenance: dict | None = None,

@@ -219,6 +219,12 @@ class ServeEngine:
         self._key = jax.random.PRNGKey(self.engine.seed)
         self._step_count = 0
         self._work_budget = 0
+        # per-request causal span chains (repro.obs.trace): last span id and
+        # a per-request sequence counter for unique step-span ids
+        self._tracing = (self.obs is not None
+                         and getattr(self.obs, "trace_enabled", False))
+        self._trace_prev: dict[int, str] = {}
+        self._trace_seq: dict[int, int] = {}
 
     # ------------------------------------------------------------- lifecycle
     def _arg(self, x, kind: str):
@@ -315,6 +321,16 @@ class ServeEngine:
             self._temps[st.slot] = st.request.temperature
             self.metrics.requests[st.request.rid].admit_step = now_step
             self._admit_enc(st)
+            if self._tracing:
+                rid = st.request.rid
+                now = self.metrics.now()
+                sid = f"r{rid}.admit"
+                self.obs.trace_span(
+                    "admit", trace=f"r{rid}", span=sid,
+                    t0=self.scheduler.eligible_wall.get(rid, now), t1=now,
+                    rid=rid, slot=st.slot)
+                self._trace_prev[rid] = sid
+                self._trace_seq[rid] = 0
 
         prefilling = [st for st in self._slots if st is not None
                       and st.phase is Phase.PREFILL]
@@ -349,6 +365,11 @@ class ServeEngine:
                     self._emit_token(st, int(tok[st.slot]), finished, first=True)
             self.metrics.prefill_chunks += 1
             self.metrics.touch()
+            if self._tracing:
+                t1 = self.metrics.now()
+                for st in prefilling:
+                    self._trace_step_span("prefill_chunk", st, t_step0, t1,
+                                          tokens=int(n_valid[st.slot]))
             self._note_step("prefill", t_step0)
             return finished
 
@@ -387,11 +408,31 @@ class ServeEngine:
                 self._emit_token(st, int(tok[st.slot]), finished)
             self.metrics.decode_steps += 1
             self.metrics.touch()
+            if self._tracing:
+                t1 = self.metrics.now()
+                for st in prefilling:   # piggybacked prompt token
+                    self._trace_step_span("prefill_chunk", st, t_step0, t1,
+                                          tokens=1, piggyback=1)
+                for st in decoding:
+                    self._trace_step_span("decode", st, t_step0, t1)
             self._note_step("decode", t_step0)
         else:
             self.metrics.idle_steps += 1  # waiting on a future arrival_step
             self._note_step("idle", t_step0)
         return finished
+
+    def _trace_step_span(self, kind: str, st: RequestState, t0: float,
+                         t1: float, **attrs) -> None:
+        """One node of a request's causal chain: admit -> prefill_chunk* ->
+        decode* — each step span parented on the request's previous span."""
+        rid = st.request.rid
+        seq = self._trace_seq.get(rid, 0)
+        self._trace_seq[rid] = seq + 1
+        sid = f"r{rid}.{'p' if kind == 'prefill_chunk' else 'd'}{seq}"
+        self.obs.trace_span(kind, trace=f"r{rid}", span=sid,
+                            parent=self._trace_prev.get(rid),
+                            t0=t0, t1=t1, rid=rid, slot=st.slot, **attrs)
+        self._trace_prev[rid] = sid
 
     def _note_step(self, kind: str, t0: float) -> None:
         """Flush one step's telemetry at the step boundary (never inside the

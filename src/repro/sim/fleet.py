@@ -127,6 +127,11 @@ class FleetDFedRW(AsyncDFedRW):
         self._f_kind = np.full(m, _NONE, dtype=np.int8)
         self._f_step = np.zeros(m, dtype=np.int32)
         self._f_time = np.full(m, np.inf)
+        # trace timing twins of runner._Slot.t_arr/t_up/t_send (written only
+        # when tracing; NaN = never happened)
+        self._t_arr = np.full((m, k), np.nan)
+        self._t_up = np.full((m, k), np.nan)
+        self._t_send = np.full((m, k), np.nan)
 
     def _q_reset(self) -> None:
         """Reset uplink busy/stats state (the array twin of
@@ -195,6 +200,12 @@ class FleetDFedRW(AsyncDFedRW):
             self._f_kind[free] = np.where(started, _HOP, _NONE).astype(np.int8)
             self._f_step[free] = 0
             self._f_time[free] = np.where(started, t0, np.inf)
+            self._t_arr[free] = np.nan
+            self._t_up[free] = np.nan
+            self._t_send[free] = np.nan
+            # same ascending-slot uid order as the heap's _fill_slots
+            self._chain_uid[free] = self._uid_next + np.arange(free.size)
+            self._uid_next += int(free.size)
         self._f_wstart[:] = self._f_kdone
 
     # ------------------------------------------------------------- timeline
@@ -239,8 +250,12 @@ class FleetDFedRW(AsyncDFedRW):
 
     def _process_hops(self, idx: np.ndarray) -> None:
         t = self._f_time[idx]
-        devs = self._f_dev[idx, self._f_step[idx]].astype(np.int64)
+        steps = self._f_step[idx]
+        devs = self._f_dev[idx, steps].astype(np.int64)
         self._now = max(self._now, float(t.max()))
+        if self._tracing:
+            first = np.isnan(self._t_arr[idx, steps])
+            self._t_arr[idx[first], steps[first]] = t[first]
         up = self.fleet.avail_at_many(devs, t)
         waited = up > t
         if waited.any():
@@ -262,6 +277,8 @@ class FleetDFedRW(AsyncDFedRW):
         live = run[~dead]
         self._f_kind[live] = _SGD
         self._f_time[live] = done[~dead]
+        if self._tracing and run.size:
+            self._t_up[run, self._f_step[run]] = t_run
 
     def _process_sgds(self, idx: np.ndarray) -> None:
         t = self._f_time[idx]
@@ -284,6 +301,8 @@ class FleetDFedRW(AsyncDFedRW):
         # self-hop: the model is already there — next hop at this instant
         self._f_kind[go[self_hop]] = _HOP
         self._f_time[go[self_hop]] = t[cont][self_hop]
+        if self._tracing and self_hop.any():
+            self._t_send[go[self_hop], k_go[self_hop] + 1] = t[cont][self_hop]
         cross = go[~self_hop]
         if cross.size == 0:
             return
@@ -301,13 +320,16 @@ class FleetDFedRW(AsyncDFedRW):
                     cur[~self_hop], nxt[~self_hop], self.hop_bits, t_ready)
             self._f_kind[cross] = _HOP
             self._f_time[cross] = t_ready + svc
+            if self._tracing:
+                # uncontended: transmit starts the instant the step finished
+                self._t_send[cross, k_go[~self_hop] + 1] = t_ready
 
     # ------------------------------------------------------------ contention
     def _fifo_serialize(self, src: np.ndarray, t_ready: np.ndarray,
-                        svc: np.ndarray) -> np.ndarray:
+                        svc: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         """FIFO-admit sends (already in admission order) through the
-        per-sender uplink arrays; returns each send's t_done. Reproduces
-        ``UplinkQueue.enqueue`` float arithmetic and stats exactly:
+        per-sender uplink arrays; returns each send's (t_start, t_done).
+        Reproduces ``UplinkQueue.enqueue`` float arithmetic and stats exactly:
         same-sender groups run the sequential ``start = max(ready, done_prev)``
         recursion; distinct senders vectorize (their queues are independent)."""
         order = np.argsort(src, kind="stable")
@@ -315,6 +337,7 @@ class FleetDFedRW(AsyncDFedRW):
         boundary = np.r_[True, s[1:] != s[:-1]]
         group_of = np.cumsum(boundary) - 1
         group_size = np.bincount(group_of)
+        t_start = np.empty(src.shape[0])
         t_done = np.empty(src.shape[0])
         single = group_size[group_of] == 1
         pos_s = order[single]
@@ -322,6 +345,7 @@ class FleetDFedRW(AsyncDFedRW):
             d = src[pos_s]
             start = np.maximum(t_ready[pos_s], self._q_busy[d])
             done = start + svc[pos_s]
+            t_start[pos_s] = start
             t_done[pos_s] = done
             self._q_busy[d] = done
             self._q_sent[d] += 1
@@ -330,7 +354,7 @@ class FleetDFedRW(AsyncDFedRW):
             self._q_first[d] = np.minimum(self._q_first[d], start)
             self._q_last[d] = np.maximum(self._q_last[d], done)
         if single.all():
-            return t_done
+            return t_start, t_done
         starts_at = np.nonzero(boundary)[0]
         for g in np.nonzero(group_size > 1)[0]:
             lo = starts_at[g]
@@ -341,6 +365,7 @@ class FleetDFedRW(AsyncDFedRW):
                 ready, s_p = float(t_ready[p]), float(svc[p])
                 start = max(ready, busy)
                 busy = start + s_p
+                t_start[p] = start
                 t_done[p] = busy
                 self._q_sent[d] += 1
                 self._q_busy_s[d] += s_p
@@ -348,7 +373,7 @@ class FleetDFedRW(AsyncDFedRW):
                 self._q_first[d] = min(self._q_first[d], start)
                 self._q_last[d] = max(self._q_last[d], busy)
             self._q_busy[d] = busy
-        return t_done
+        return t_start, t_done
 
     def _admit_sends(self, limit: float, strict: bool) -> None:
         sel = self._within(limit, strict) & (self._f_kind == _SEND)
@@ -362,10 +387,11 @@ class FleetDFedRW(AsyncDFedRW):
         src = self._f_dev[idx, step - 1].astype(np.int64)
         dst = self._f_dev[idx, step].astype(np.int64)
         svc = self.link.transfer_time_batch(src, dst, self.hop_bits)
-        t_done = self._fifo_serialize(src, t_ready, svc)
+        t_start, t_done = self._fifo_serialize(src, t_ready, svc)
         if isinstance(self.link, HierarchicalLinkModel):
-            self.link.record_batch(src, dst, self.hop_bits,
-                                   np.maximum(t_ready, t_done - svc))
+            self.link.record_batch(src, dst, self.hop_bits, t_start)
+        if self._tracing:
+            self._t_send[idx, step] = t_start
         self._f_kind[idx] = _HOP
         self._f_time[idx] = t_done
 
@@ -380,6 +406,7 @@ class FleetDFedRW(AsyncDFedRW):
         src = agg_rows.astype(np.int64)[valid]       # row-major == heap order
         dst = np.broadcast_to(a_col, agg_rows.shape)[valid]
         if src.size == 0:
+            self._trace_agg_msgs = [] if self._tracing else None
             return 0.0
         svc = self.link.transfer_time_batch(src, dst, self.hop_bits)
         if isinstance(self.link, HierarchicalLinkModel):
@@ -389,6 +416,11 @@ class FleetDFedRW(AsyncDFedRW):
                          np.full(src.shape, t_trigger))
             self.link.record_batch(src, dst, self.hop_bits, start_est)
         if not self._queue_on:
+            if self._tracing:
+                dones = t_trigger + svc
+                self._trace_agg_msgs = list(zip(
+                    src.tolist(), dst.tolist(),
+                    [t_trigger] * src.shape[0], dones.tolist()))
             worst = max(t_trigger, float((t_trigger + svc).max()))
             return worst - t_trigger
         # Same-instant burst: every message is ready at t_trigger, so the
@@ -402,11 +434,19 @@ class FleetDFedRW(AsyncDFedRW):
         starts_at = np.nonzero(boundary)[0]
         group_of = np.cumsum(boundary) - 1
         group_size = np.bincount(group_of)
+        tracing = self._tracing
+        if tracing:
+            starts_full = np.empty(src.shape[0])
+            dones_full = np.empty(src.shape[0])
         for g in range(group_size.shape[0]):
             pos = order[starts_at[g]:starts_at[g] + group_size[g]]
             d = int(src[pos[0]])
             base = max(t_trigger, float(self._q_busy[d]))
             dones = np.cumsum(np.concatenate(([base], svc[pos])))[1:]
+            if tracing:
+                # each message transmits when its predecessor lands (FIFO)
+                starts_full[pos] = np.concatenate(([base], dones[:-1]))
+                dones_full[pos] = dones
             worst = max(worst, float(dones[-1]))
             self._q_busy[d] = dones[-1]
             self._q_sent[d] += pos.shape[0]
@@ -417,6 +457,10 @@ class FleetDFedRW(AsyncDFedRW):
                 np.concatenate(([self._q_queued[d]], queued)))[-1]
             self._q_first[d] = min(self._q_first[d], base)
             self._q_last[d] = max(self._q_last[d], float(dones[-1]))
+        if tracing:
+            self._trace_agg_msgs = list(zip(
+                src.tolist(), dst.tolist(),
+                starts_full.tolist(), dones_full.tolist()))
         return worst - t_trigger
 
     def _drop_down_aggregators(self, agg: tuple, t: float) -> tuple:
@@ -467,7 +511,8 @@ class FleetDFedRW(AsyncDFedRW):
         m, k = plan.m, plan.k_max
         stash = (self._f_dev, self._f_bidx, self._f_ts, self._f_km,
                  self._f_kdone, self._f_wstart, self._f_killed, self._f_occ,
-                 self._f_kind, self._f_step, self._f_time, self._now)
+                 self._f_kind, self._f_step, self._f_time,
+                 self._t_arr, self._t_up, self._t_send, self._now)
         self._alloc_chains(m, k, 0)
         self._q_reset()
         self._now = t0
@@ -483,5 +528,15 @@ class FleetDFedRW(AsyncDFedRW):
         killed = self._f_killed.copy()
         (self._f_dev, self._f_bidx, self._f_ts, self._f_km, self._f_kdone,
          self._f_wstart, self._f_killed, self._f_occ, self._f_kind,
-         self._f_step, self._f_time, self._now) = stash
+         self._f_step, self._f_time,
+         self._t_arr, self._t_up, self._t_send, self._now) = stash
         return k_done, ts, killed, events, host_loop_s
+
+    # ------------------------------------------------------------- tracing
+    def _trace_arrays(self) -> tuple:
+        """The fleet's chain state already IS the arrays ``emit_walk_window``
+        consumes — hand over views, no per-slot stacking."""
+        return (self._chain_uid.copy(), self._f_dev,
+                self._f_wstart.astype(np.int64),
+                self._f_kdone.astype(np.int64),
+                self._t_arr, self._t_up, self._f_ts, self._t_send)

@@ -190,15 +190,21 @@ class HierarchicalLinkModel:
              t_ready: float) -> float:
         """Arrival instant; FIFO-serialized on ``src``'s device uplink when
         ``cfg.queue``, else ``t_ready + transfer_time``."""
+        return self.send_ex(src, dst, payload_bits, t_ready)[1]
+
+    def send_ex(self, src: int, dst: int, payload_bits: float,
+                t_ready: float) -> tuple[float, float]:
+        """``(transmit_start, arrival)``; see ``LinkModel.send_ex``. Tier
+        accounting is unchanged (priced at the transmit start)."""
         if src == dst:
-            return t_ready
+            return t_ready, t_ready
         service = self.transfer_time(src, dst, payload_bits)
         if self.uplinks is None:
             self._account_tiers(src, dst, payload_bits, t_ready)
-            return t_ready + service
+            return t_ready, t_ready + service
         t_start, t_done = self.uplinks.enqueue(src, t_ready, service)
         self._account_tiers(src, dst, payload_bits, t_start)
-        return t_done
+        return t_start, t_done
 
     def uplink_stats(self, device: int) -> UplinkStats | None:
         """Per-device contention accounting (None when queue=False or the

@@ -124,13 +124,21 @@ class LinkModel:
         bit-identical to the queue-free pricing. Contended: the message
         enters ``src``'s FIFO uplink and its transfer_time becomes *service
         time*; arrival is when the uplink finishes serving it."""
+        return self.send_ex(src, dst, payload_bits, t_ready)[1]
+
+    def send_ex(self, src: int, dst: int, payload_bits: float,
+                t_ready: float) -> tuple[float, float]:
+        """``(transmit_start, arrival)`` — ``send``'s pricing with the FIFO
+        admission instant exposed, so tracing can split a hand-off into
+        ``queue_wait`` (``[t_ready, transmit_start]``) and ``transfer``
+        (``[transmit_start, arrival]``) spans. Identical arithmetic and
+        jitter-draw order to ``send``."""
         if src == dst:
-            return t_ready
+            return t_ready, t_ready
         service = self.transfer_time(src, dst, payload_bits)
         if self.uplinks is None:
-            return t_ready + service
-        _, t_done = self.uplinks.enqueue(src, t_ready, service)
-        return t_done
+            return t_ready, t_ready + service
+        return self.uplinks.enqueue(src, t_ready, service)
 
     def transfer_time_batch(self, src: np.ndarray, dst: np.ndarray,
                             payload_bits: float) -> np.ndarray:

@@ -158,6 +158,10 @@ class _Slot:
     k_done: int = 0            # lifetime completed steps
     win_start: int = 0         # k_done when the current window opened
     killed: bool = False       # device churned out mid-step: chain is dead
+    # trace timing (written only when tracing; NaN = never happened):
+    t_arr: np.ndarray | None = None    # (K,) model arrived at step k's device
+    t_up: np.ndarray | None = None     # (K,) churn wait ended / compute began
+    t_send: np.ndarray | None = None   # (K,) uplink transmit start INTO step k
 
 
 @dataclasses.dataclass
@@ -304,6 +308,11 @@ class AsyncDFedRW:
         self._last_metrics: RoundMetrics | None = None
         self.obs = None                      # repro.obs.Recorder (attach_obs)
         self._obs_uplink_prev = (0.0, 0.0, 0)
+        self._tracing = False                # causal span trees (attach_obs)
+        self._trace_coarse = False
+        self._chain_uid = np.zeros(cfg.m_chains, dtype=np.int64)
+        self._uid_next = 0                   # next chain trace uid (slot fill)
+        self._trace_agg_msgs: list | None = None
         self.queue = EventQueue()
         self.t = 0.0
         self._slots: list[_Slot | None] = [None] * cfg.m_chains
@@ -361,13 +370,18 @@ class AsyncDFedRW:
         (finished after its last sgd, or killed without a re-push)."""
         slot = slots[ev.chain]
         fleet, link, q = self.fleet, self.link, self.queue
+        tracing = self._tracing
         mi, k = ev.chain, ev.step
         dev = int(slot.devices[k])
         if ev.kind == "hop":
+            if tracing and np.isnan(slot.t_arr[k]):
+                slot.t_arr[k] = ev.time    # first fire = wire arrival
             up = fleet.avail_at(dev, ev.time)
             if up > ev.time:          # wait out the down interval
                 q.push(up, "hop", chain=mi, step=k)
                 return
+            if tracing:
+                slot.t_up[k] = ev.time     # churn wait over: compute starts
             done_t = ev.time + fleet.step_time(dev)
             if fleet.down_during(dev, ev.time, done_t) is not None:
                 slot.killed = True    # device lost mid-step: chain ends
@@ -378,7 +392,12 @@ class AsyncDFedRW:
             slot.ts[k] = ev.time
             if k + 1 < slot.k_m:
                 nxt = int(slot.devices[k + 1])
-                t_arr = link.send(dev, nxt, self.hop_bits, ev.time)
+                if tracing:
+                    t_send, t_arr = link.send_ex(dev, nxt, self.hop_bits,
+                                                 ev.time)
+                    slot.t_send[k + 1] = t_send
+                else:
+                    t_arr = link.send(dev, nxt, self.hop_bits, ev.time)
                 q.push(t_arr, "hop", chain=mi, step=k + 1)
 
     def simulate_walk_timing(
@@ -398,7 +417,10 @@ class AsyncDFedRW:
         slots: list = [
             _Slot(devices=plan.devices[mi], k_m=int(plan.k_m[mi]),
                   bidx=np.zeros((plan.k_max, 0), dtype=np.int64),
-                  ts=np.full(plan.k_max, np.nan))
+                  ts=np.full(plan.k_max, np.nan),
+                  t_arr=np.full(plan.k_max, np.nan),
+                  t_up=np.full(plan.k_max, np.nan),
+                  t_send=np.full(plan.k_max, np.nan))
             for mi in range(m)
         ]
         self.queue.clear(now=t0)
@@ -423,14 +445,22 @@ class AsyncDFedRW:
         its FIFO transmit queue — and keep it busy into the next window, so
         an aggregation burst congests the walks that follow."""
         agg_devices, agg_rows, agg_w = agg
+        msgs: list | None = [] if self._tracing else None
         worst = t_trigger
         for a, row, w in zip(agg_devices, agg_rows, agg_w):
             if a >= n:
                 continue  # pad slot
             for src, wi in zip(row, w):
                 if wi > 0.0 and src != a:
-                    worst = max(worst, self.link.send(
-                        int(src), int(a), self.hop_bits, t_trigger))
+                    if msgs is None:
+                        t_done = self.link.send(
+                            int(src), int(a), self.hop_bits, t_trigger)
+                    else:
+                        t_start, t_done = self.link.send_ex(
+                            int(src), int(a), self.hop_bits, t_trigger)
+                        msgs.append((int(src), int(a), t_start, t_done))
+                    worst = max(worst, t_done)
+        self._trace_agg_msgs = msgs
         return worst - t_trigger
 
     # -------------------------------------------------- adaptive bit-widths
@@ -504,7 +534,15 @@ class AsyncDFedRW:
             for j, slot_i in enumerate(free):
                 self._slots[slot_i] = _Slot(
                     devices=plan.devices[j], k_m=int(plan.k_m[j]),
-                    bidx=bidx[j], ts=np.full(plan.k_max, np.nan))
+                    bidx=bidx[j], ts=np.full(plan.k_max, np.nan),
+                    t_arr=np.full(plan.k_max, np.nan),
+                    t_up=np.full(plan.k_max, np.nan),
+                    t_send=np.full(plan.k_max, np.nan))
+                # trace uids in ascending free-slot order: the fleet engine
+                # fills the same slots in the same order, so chain trace ids
+                # agree across timeline backends
+                self._chain_uid[slot_i] = self._uid_next + j
+            self._uid_next += len(free)
         fresh = set(free)
         for slot_i, slot in enumerate(self._slots):
             slot.win_start = slot.k_done
@@ -562,18 +600,35 @@ class AsyncDFedRW:
         return self.engine.init_state(key)
 
     # ------------------------------------------------------------ telemetry
-    def attach_obs(self, rec) -> None:
+    def attach_obs(self, rec, trace: bool | str | None = None) -> None:
         """Attach a ``repro.obs.Recorder``; an unbound ``VirtualClock`` is
         bound to this runner's virtual time, so spans/flushes are priced in
         virtual seconds and the recorded stream is a pure function of
         (scenario, seed) — same seed, identical stream, any host. The engine
         shares the recorder (``engine/*`` series land in the same stream).
-        Host-side only: no event-loop, RNG or engine behavior changes."""
+        Host-side only: no event-loop, RNG or engine behavior changes.
+
+        ``trace`` turns on causal span trees (``repro.obs.trace``): ``None``
+        inherits ``rec.trace_enabled``, ``True``/``False`` force it, and
+        ``"full"``/``"coarse"`` additionally pin the emission granularity
+        (default: coarsen past ``TRACE_COARSE_LIMIT`` chain-steps per
+        window, logged as ``trace_coarse`` in the stream header)."""
         self.obs = rec
         if isinstance(rec.clock, VirtualClock) and not rec.clock.bound:
             rec.clock.bind(lambda: self.t)
         self.engine.attach_obs(rec)
         self._obs_uplink_prev = (0.0, 0.0, 0)
+        mode = rec.trace_enabled if trace is None else trace
+        self._tracing = bool(mode)
+        if self._tracing:
+            from repro.obs.trace import TRACE_COARSE_LIMIT
+            rec.trace_enabled = True
+            cfg = self.engine.cfg
+            est = cfg.m_chains * max(cfg.k_walk, 1)
+            self._trace_coarse = (mode == "coarse" or
+                                  (mode != "full" and est > TRACE_COARSE_LIMIT))
+            if self._trace_coarse:
+                rec.note_trace_coarse()
 
     def _obs_window(self, record: "SimRoundRecord", exec_plan: WalkPlan) -> None:
         """Per-window telemetry at the aggregation trigger (off-hot-path:
@@ -603,7 +658,39 @@ class AsyncDFedRW:
             obs.duration("sim/uplink_queued", dq, t=record.t_end)
         # the AdaptiveBits controller's input signal, window-local
         obs.gauge("sim/queue_pressure", dq / (dq + db) if (dq + db) > 0 else 0.0)
+        if self._tracing:
+            self._emit_trace_window(record)
         obs.flush(t=record.t_end)
+
+    def _trace_arrays(self) -> tuple:
+        """Stack the per-slot trace timing into the ``(M,)``/``(M, K)``
+        arrays ``emit_walk_window`` consumes. The fleet engine overrides
+        this with views of its native arrays — the emitter itself is shared,
+        which is what makes heap and fleet traces identical by
+        construction."""
+        slots = self._slots
+        return (self._chain_uid.copy(),
+                np.stack([s.devices for s in slots]),
+                np.array([s.win_start for s in slots], dtype=np.int64),
+                np.array([s.k_done for s in slots], dtype=np.int64),
+                np.stack([s.t_arr for s in slots]),
+                np.stack([s.t_up for s in slots]),
+                np.stack([s.ts for s in slots]),
+                np.stack([s.t_send for s in slots]))
+
+    def _emit_trace_window(self, record: "SimRoundRecord") -> None:
+        """Emit the window's causal span trees (called at the aggregation
+        trigger, before slot release — every completed step is emitted in
+        exactly the window it completed in)."""
+        from repro.obs.trace import emit_walk_window
+        uids, devices, j0, j1, t_arr, t_up, ts, t_send = self._trace_arrays()
+        emit_walk_window(self.obs, record.round, uids=uids, devices=devices,
+                         win_start=j0, k_done=j1, t_arr=t_arr, t_up=t_up,
+                         ts=ts, t_send=t_send,
+                         agg_msgs=self._trace_agg_msgs,
+                         t_compute_end=record.t_compute_end,
+                         t_end=record.t_end, coarse=self._trace_coarse)
+        self._trace_agg_msgs = None
 
     def _reset_timeline(self) -> None:
         """Rewind the virtual timeline for a fresh run on this runner: the
@@ -625,6 +712,9 @@ class AsyncDFedRW:
         self._uplink_prev = (0.0, 0.0, 0)
         self._obs_uplink_prev = (0.0, 0.0, 0)
         self._last_metrics = None
+        self._chain_uid[:] = 0
+        self._uid_next = 0
+        self._trace_agg_msgs = None
 
     def _drive(
         self,

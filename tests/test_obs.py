@@ -88,8 +88,33 @@ def test_histogram_moments_and_reservoir_cap():
     assert s["count"] == HIST_RESERVOIR + 101
     assert s["min"] == 0.0 and s["max"] == HIST_RESERVOIR + 99
     assert s["p50"] <= s["p90"] <= s["p99"] <= s["max"]
-    # keep-first reservoir: bounded and deterministic
-    assert len(rec._hists["h"].samples) == HIST_RESERVOIR
+    # strided thinning: bounded, deterministic, and covering the whole run
+    h = rec._hists["h"]
+    assert len(h.samples) < HIST_RESERVOIR
+    assert h.stride > 1
+    assert max(h.samples) >= HIST_RESERVOIR  # late observations survive
+
+
+def test_histogram_thinning_unbiased_percentiles():
+    # Regression for the keep-first reservoir: after the cap, percentiles
+    # only reflected the run's start (p50 of 0..9999 reported ~2048).
+    rec = Recorder()
+    rec.histogram("h", np.arange(10_000))
+    s = rec.summary()["hists"]["h"]
+    assert abs(s["p50"] - 5_000) < 300
+    assert abs(s["p90"] - 9_000) < 300
+    assert abs(s["p99"] - 9_900) < 300
+
+
+def test_histogram_thinning_deterministic():
+    # Same feed -> same kept samples (no RNG), split points irrelevant.
+    a, b = Recorder(), Recorder()
+    vals = np.arange(12_345, dtype=float)
+    a.histogram("h", vals)
+    for chunk in np.array_split(vals, 17):
+        b.histogram("h", chunk)
+    assert a._hists["h"].samples == b._hists["h"].samples
+    assert a._hists["h"].stride == b._hists["h"].stride
 
 
 def test_span_duration_and_record_span():
@@ -122,6 +147,26 @@ def test_clock_kinds_and_semantics():
     assert not vc.bound and vc.now() == 0.0
     vc.bind(lambda: 42.0)
     assert vc.bound and vc.now() == 42.0
+
+
+def test_unbound_virtual_clock_warns_once_and_flags_header():
+    """Recording spans against an unbound VirtualClock (every timestamp
+    silently 0.0) warns exactly once and marks the stream header."""
+    rec = Recorder(clock=VirtualClock())
+    with pytest.warns(UserWarning, match="unbound VirtualClock"):
+        rec.record_span("sim/window", 0.0, 1.0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")          # one-shot: no second warning
+        rec.record_span("sim/window", 1.0, 2.0)
+        with rec.span("x"):
+            pass
+    assert rec.to_stream().header["clock_unbound"] is True
+
+    bound = Recorder(clock=VirtualClock(lambda: 5.0))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        bound.record_span("sim/window", 0.0, 1.0)
+    assert "clock_unbound" not in bound.to_stream().header
 
 
 def test_jax_profile_noop_paths():
@@ -176,6 +221,21 @@ def test_prometheus_format():
     text2 = render_prometheus(rec.to_stream())
     assert 'repro_engine_comm_bits_total{bits="8"} 640' in text2
     assert "repro_sim_bits 8" in text2
+
+
+def test_prometheus_histogram_quantiles_and_extremes():
+    rec = Recorder()
+    rec.histogram("serve/ttft_s", [1.0, 2.0, 3.0, 4.0])
+    rec.histogram("sim/steps", [10, 20], phase="walk")   # labeled series
+    for text in (rec.to_prometheus(), render_prometheus(rec.to_stream())):
+        assert 'repro_serve_ttft_s{quantile="0.5"}' in text
+        assert 'repro_serve_ttft_s{quantile="0.9"}' in text
+        assert 'repro_serve_ttft_s{quantile="0.99"} 4' in text
+        assert "repro_serve_ttft_s_min 1" in text
+        assert "repro_serve_ttft_s_max 4" in text
+        # quantile label splices INTO an existing label set
+        assert 'repro_sim_steps{phase="walk",quantile="0.5"}' in text
+        assert 'repro_sim_steps_min{phase="walk"} 10' in text
 
 
 # -------------------------------------------------------------- provenance

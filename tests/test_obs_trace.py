@@ -1,0 +1,392 @@
+"""Causal span trees (`repro.obs.trace`) and the tools built on them.
+
+The invariants under test:
+
+* **engine parity**: heap and fleet emit byte-identical ``tspan`` event
+  lists for every config both accept — span ids, parents and endpoints are
+  derived from the same timing arrays through ``emit_walk_window``;
+* **tracing is free semantically**: a traced run is bit-exact with an
+  untraced one (params, virtual time, compiled-program table), and traced
+  streams are byte-deterministic per scenario + seed;
+* **the causal contract**: sgd/churn_wait hang off their hop, a hop off the
+  transfer that delivered the model (or the previous hop for self-hops),
+  queue_wait off the transfer it delayed; step-0 hops are roots;
+* **coarse mode** keeps parity and the critical-path sections while
+  collapsing chains to per-window envelope spans (``trace_coarse`` header);
+* the **critical-path analyzer** attributes window latency to
+  compute/wire/queueing/churn and names the straggler device;
+* the **Chrome trace-event exporter** emits schema-valid JSON and the
+  **obs_diff** tool exits 0 on self-compare, nonzero past its threshold.
+"""
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.obs import (
+    ObsStream,
+    PausableWallClock,
+    Recorder,
+    SPAN_KINDS,
+    VirtualClock,
+    build_trees,
+    critical_paths,
+    make_obs_header,
+    render_critical,
+    render_report,
+    spans_of,
+    straggler_table,
+)
+from repro.sim import build_scenario
+
+TOOLS = Path(__file__).resolve().parent.parent / "tools"
+
+
+def _load_tool(name: str):
+    spec = importlib.util.spec_from_file_location(name, TOOLS / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _traced_run(scenario, engine, n, rounds=3, trace=True):
+    setup = build_scenario(scenario, n=n, seed=0, rounds=rounds)
+    runner = setup.runner(engine=engine)
+    rec = Recorder(clock=VirtualClock(), trace=bool(trace))
+    runner.attach_obs(rec, trace=trace if isinstance(trace, str) else None)
+    result = runner.run(rounds, jax.random.PRNGKey(0),
+                        setup.x_test, setup.y_test, eval_every=rounds)
+    return runner, result, rec
+
+
+# Scenarios both engines accept: deadline windows, stragglers, FIFO uplink
+# contention, cross-window chain resumption.
+PARITY_SCENARIOS = ["uniform_sync", "straggler_tail", "congested_uplink",
+                    "overlap_async"]
+
+
+# ------------------------------------------------------- heap vs fleet parity
+@pytest.mark.parametrize("scenario", PARITY_SCENARIOS)
+def test_heap_vs_fleet_tspan_parity(scenario):
+    """Same config, both engines: byte-identical tspan event lists."""
+    streams = {}
+    for engine in ("heap", "fleet"):
+        _, _, rec = _traced_run(scenario, engine, 8)
+        streams[engine] = [ev for ev in rec.events
+                           if ev.get("kind") == "tspan"]
+    assert streams["heap"], f"{scenario}: no tspan events emitted"
+    assert ([json.dumps(e) for e in streams["heap"]]
+            == [json.dumps(e) for e in streams["fleet"]])
+
+
+# -------------------------------------------------- tracing changes nothing
+@pytest.mark.parametrize("engine", ["heap", "fleet"])
+def test_trace_on_bit_exact_vs_off(engine):
+    r_off, res_off, _ = _traced_run("straggler_tail", engine, 8, trace=False)
+    r_on, res_on, rec = _traced_run("straggler_tail", engine, 8, trace=True)
+    np.testing.assert_array_equal(np.asarray(res_off.state.device_params),
+                                  np.asarray(res_on.state.device_params))
+    assert r_off.t == r_on.t
+    assert r_off.engine.trace_count == r_on.engine.trace_count
+    assert any(ev.get("kind") == "tspan" for ev in rec.events)
+
+
+def test_traced_stream_byte_deterministic():
+    lines = []
+    for _ in range(2):
+        _, _, rec = _traced_run("congested_uplink", "heap", 8)
+        lines.append(rec.to_stream(workload="sim").to_lines())
+    assert lines[0] == lines[1]
+    header = json.loads(lines[0][0])
+    assert header["trace"] is True
+    assert "trace_coarse" not in header
+
+
+# -------------------------------------------------------- causal structure
+def test_span_kinds_and_parent_contract():
+    _, _, rec = _traced_run("congested_uplink", "heap", 8)
+    spans = spans_of(rec.events)
+    assert {s.kind for s in spans} <= set(SPAN_KINDS)
+    trees = build_trees(spans)
+    chains = {t: tree for t, tree in trees.items() if t.startswith("c")}
+    wins = {t: tree for t, tree in trees.items() if t.startswith("w")}
+    assert chains and wins
+
+    kind_of = {(s.trace, s.span): s.kind for s in spans}
+    for s in spans:
+        assert s.t1 >= s.t0, s
+        if s.parent is None:
+            continue
+        pk = kind_of.get((s.trace, s.parent))
+        if pk is None:
+            # dangling parent: only a hop/transfer resuming a chain whose
+            # earlier steps were emitted in a previous window
+            assert s.trace.startswith("c") and s.kind in ("hop", "transfer")
+            continue
+        expect = {"sgd": ("hop",), "churn_wait": ("hop",),
+                  "hop": ("transfer", "hop"),
+                  "transfer": ("hop", "aggregate"),
+                  "queue_wait": ("transfer",)}
+        assert pk in expect[s.kind], (s.kind, pk, s.span)
+
+    # every window trace is rooted at its single aggregate span
+    for tree in wins.values():
+        roots = tree.roots
+        assert len(roots) == 1 and roots[0].kind == "aggregate"
+    # chain step-0 hops are parentless roots
+    step0 = [s for s in spans if s.span.endswith(".h0")]
+    assert step0 and all(s.parent is None for s in step0)
+
+
+# ------------------------------------------------------------- coarse mode
+def test_coarse_mode_envelopes_and_parity():
+    streams = {}
+    for engine in ("heap", "fleet"):
+        _, _, rec = _traced_run("straggler_tail", engine, 8, trace="coarse")
+        streams[engine] = rec.to_stream(workload="sim")
+    a, b = streams["heap"], streams["fleet"]
+    assert ([json.dumps(e) for e in a.events if e.get("kind") == "tspan"]
+            == [json.dumps(e) for e in b.events if e.get("kind") == "tspan"])
+    assert a.header["trace_coarse"] is True
+
+    spans = spans_of(a)
+    envelopes = [s for s in spans if "steps" in s.attrs]
+    assert envelopes, "coarse mode emitted no envelope spans"
+    assert all(s.kind == "hop" and ".W" in s.span for s in envelopes)
+    for s in envelopes:
+        for key in ("sgd_s", "churn_s", "transfer_s", "queue_s"):
+            assert key in s.attrs
+    # no per-step spans besides the envelopes and the aggregation trace
+    assert all(s.trace.startswith("w") or "steps" in s.attrs for s in spans)
+    # the analyzer reads envelope attrs: attribution still lands
+    paths = critical_paths(a)
+    assert paths and all(p.attribution for p in paths)
+
+
+def test_coarse_auto_threshold():
+    """attach_obs picks coarse automatically past TRACE_COARSE_LIMIT."""
+    from repro.obs.trace import TRACE_COARSE_LIMIT
+
+    setup = build_scenario("straggler_tail", n=8, seed=0, rounds=3)
+    runner = setup.runner(engine="heap")
+    rec = Recorder(clock=VirtualClock(), trace=True)
+    runner.attach_obs(rec)
+    cfg = runner.engine.cfg
+    small = cfg.m_chains * max(cfg.k_walk, 1)
+    assert small <= TRACE_COARSE_LIMIT and runner._trace_coarse is False
+
+
+# --------------------------------------------------------------- v1 compat
+def test_v1_stream_still_loads():
+    header = {**make_obs_header(clock="virtual"), "version": 1}
+    ev = {"kind": "span", "name": "sim/window", "t0": 0.0, "t1": 2.0}
+    stream = ObsStream.from_lines([json.dumps(header), json.dumps(ev)])
+    assert stream.header["version"] == 1
+    report = render_report(stream)
+    assert "sim/window" in report
+    assert "critical path" not in report    # v1 streams carry no tspans
+
+
+# ------------------------------------------------------------------ serving
+def test_serve_trace_spans_and_token_parity():
+    from repro.models import transformer as T
+    from repro.models.config import ArchConfig
+    from repro.serve import EngineConfig, Request, ServeEngine
+
+    cfg = ArchConfig(name="d", n_layers=2, d_model=64, n_heads=4,
+                     n_kv_heads=2, d_ff=128, vocab=64, qkv_bias=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab,
+                                        size=(int(rng.integers(2, 12)),)),
+                    max_tokens=int(rng.integers(2, 8)), eos_id=-1)
+            for i in range(5)]
+    econf = EngineConfig(max_concurrency=2, max_len=32, chunk=8)
+
+    off = ServeEngine(cfg, params, econf).run(reqs)
+    rec = Recorder(clock=PausableWallClock(), trace=True)
+    on = ServeEngine(cfg, params, econf, obs=rec).run(reqs)
+    assert [st.generated for st in on] == [st.generated for st in off]
+
+    trees = build_trees(spans_of(rec.events))
+    assert set(trees) == {f"r{r.rid}" for r in reqs}
+    for r in reqs:
+        tree = trees[f"r{r.rid}"]
+        kinds = [s.kind for s in tree.spans.values()]
+        assert kinds[0] == "admit"
+        assert kinds.count("admit") == 1
+        assert "prefill_chunk" in kinds
+        assert sum(1 for k in kinds if k == "decode") >= r.max_tokens - 1
+        # linear causal chain: admit is the only root, every other span has
+        # exactly one child except the last
+        roots = tree.roots
+        assert len(roots) == 1 and roots[0].kind == "admit"
+        assert all(len(ids) == 1 for p, ids in tree.children.items()
+                   if p is not None)
+
+
+# ---------------------------------------------------------- critical path
+def _window_spans(win, queue_s):
+    """One synthetic window: chain c0 on dev 42 with a large uplink queue
+    wait, chain c1 finishing earlier (not critical)."""
+    rec = Recorder(clock=VirtualClock(lambda: 0.0), trace=True)
+    t = 10.0 * win
+    rec.trace_span("hop", trace="c1", span=f"c1.h{win}", t0=t, t1=t + 1.0,
+                   win=win, dev=7, k=win)
+    rec.trace_span("sgd", trace="c1", span=f"c1.s{win}",
+                   parent=f"c1.h{win}", t0=t, t1=t + 1.0, win=win, dev=7,
+                   k=win)
+    rec.trace_span("queue_wait", trace="c0", span=f"c0.q{win}",
+                   parent=f"c0.t{win}", t0=t, t1=t + queue_s, win=win,
+                   src=42)
+    rec.trace_span("transfer", trace="c0", span=f"c0.t{win}", t0=t + queue_s,
+                   t1=t + queue_s + 0.5, win=win, src=42, dst=3)
+    rec.trace_span("hop", trace="c0", span=f"c0.h{win}",
+                   parent=f"c0.t{win}", t0=t + queue_s + 0.5,
+                   t1=t + queue_s + 2.0, win=win, dev=3, k=win)
+    rec.trace_span("sgd", trace="c0", span=f"c0.s{win}",
+                   parent=f"c0.h{win}", t0=t + queue_s + 0.5,
+                   t1=t + queue_s + 2.0, win=win, dev=3, k=win)
+    rec.trace_span("aggregate", trace=f"w{win}", span=f"w{win}.agg",
+                   t0=t + queue_s + 2.0, t1=t + queue_s + 2.5, win=win,
+                   msgs=1)
+    rec.trace_span("transfer", trace=f"w{win}", span=f"w{win}.t0",
+                   parent=f"w{win}.agg", t0=t + queue_s + 2.0,
+                   t1=t + queue_s + 2.5, win=win, src=3, dst=0)
+    return spans_of(rec.events)
+
+
+def test_critical_path_names_bottleneck_device():
+    spans = _window_spans(0, queue_s=6.0) + _window_spans(1, queue_s=5.0)
+    paths = critical_paths(spans)
+    assert [p.win for p in paths] == [0, 1]
+    p = paths[0]
+    assert p.chain == "c0"                      # latest-finishing chain
+    assert p.bottleneck_kind == "queue_wait"
+    assert p.bottleneck_dev == 42
+    assert "queue_wait on uplink dev=42" in p.describe()
+    assert p.attribution["queue_wait"] == pytest.approx(6.0)
+    assert p.attribution["agg_transfer"] == pytest.approx(0.5)
+
+    league = straggler_table(paths)
+    assert league[0][0] == 42                   # worst straggler first
+    assert league[0][2] == 2                    # on the path in both windows
+    text = "\n".join(render_critical(spans))
+    assert "queue_wait on uplink dev=42" in text
+    assert "straggler league" in text
+
+
+def test_critical_path_on_real_run_matches_extents():
+    runner, _, rec = _traced_run("straggler_tail", "heap", 8)
+    paths = critical_paths(rec.to_stream(workload="sim"))
+    assert len(paths) == 3
+    for p in paths:
+        assert p.window_s > 0
+        on_path = sum(p.attribution.values())
+        assert on_path <= p.window_s + 1e-9
+        assert p.slack_s == pytest.approx(p.window_s - on_path)
+    assert paths[-1].t1 == pytest.approx(runner.t)
+
+
+# ------------------------------------------------------------------ report
+def test_report_has_critical_section_and_rebuilds_truncated():
+    _, _, rec = _traced_run("straggler_tail", "heap", 8)
+    stream = rec.to_stream(workload="sim")
+    full = render_report(stream)
+    assert "critical path" in full and "straggler league" in full
+    assert "trace/sgd" in full      # tspan kinds roll up into span totals
+
+    # a stream cut before its summary line rebuilds the same report —
+    # tables, distribution tails and the critical-path section included
+    cut = ObsStream(header=stream.header, events=stream.events, summary=None)
+    assert render_report(cut) == full
+
+
+# ------------------------------------------------------------------- tools
+@pytest.fixture(scope="module")
+def traced_stream_path(tmp_path_factory):
+    _, _, rec = _traced_run("congested_uplink", "heap", 8)
+    path = tmp_path_factory.mktemp("obs") / "obs.jsonl"
+    rec.save(str(path), workload="sim", scenario="congested_uplink")
+    return str(path)
+
+
+def test_chrome_trace_export_schema(traced_stream_path, tmp_path):
+    tool = _load_tool("obs_trace_export")
+    out = tmp_path / "trace.json"
+    assert tool.main([traced_stream_path, "-o", str(out)]) == 0
+    doc = json.loads(out.read_text())
+    assert set(doc) == {"traceEvents", "displayTimeUnit", "otherData"}
+    evs = doc["traceEvents"]
+    xs = [e for e in evs if e["ph"] == "X"]
+    ms = [e for e in evs if e["ph"] == "M"]
+    assert len(xs) + len(ms) == len(evs) and xs and ms
+    stream = ObsStream.load(traced_stream_path)
+    assert len(xs) == sum(1 for e in stream.events
+                          if e.get("kind") == "tspan")
+    tids = {e["tid"]: e["args"]["name"] for e in ms}
+    for e in xs:
+        assert isinstance(e["name"], str) and e["name"] in SPAN_KINDS
+        assert e["pid"] == 1 and e["tid"] in tids
+        assert isinstance(e["ts"], float) and isinstance(e["dur"], float)
+        assert e["dur"] >= 0.0
+        assert e["args"]["trace"] == tids[e["tid"]]
+
+    # no tspans -> explicit error, not an empty export
+    bare = tmp_path / "bare.jsonl"
+    Recorder(clock=VirtualClock(lambda: 0.0)).save(str(bare))
+    assert tool.main([str(bare), "-o", str(tmp_path / "x.json")]) == 2
+
+
+def test_obs_diff_self_compare_is_clean(traced_stream_path, capsys):
+    tool = _load_tool("obs_diff")
+    assert tool.main([traced_stream_path, traced_stream_path]) == 0
+    assert "within threshold" in capsys.readouterr().out
+
+
+def test_obs_diff_flags_span_regression(tmp_path, capsys):
+    """A 2x slowdown injected into every span must trip the default
+    threshold; --warn-only reports it but exits 0."""
+    tool = _load_tool("obs_diff")
+
+    def make(scale):
+        rec = Recorder(clock=VirtualClock(lambda: 0.0), trace=True)
+        rec.counter("sim/windows", 3)
+        for k in range(3):
+            rec.trace_span("sgd", trace="c0", span=f"c0.s{k}",
+                           parent=f"c0.h{k}", t0=1.0 * k,
+                           t1=1.0 * k + scale * 0.8, win=0, dev=1, k=k)
+            rec.record_span("sim/window", 2.0 * k, 2.0 * k + scale)
+        path = tmp_path / f"obs_{scale}.jsonl"
+        rec.save(str(path), workload="sim")
+        return str(path)
+
+    base, slow = make(1.0), make(2.0)
+    assert tool.main([base, slow]) == 1
+    out = capsys.readouterr().out
+    assert "REGRESSION" in out
+    assert "span_total_s:trace/sgd" in out
+    assert tool.main([base, slow, "--warn-only"]) == 0
+    assert tool.main([base, slow, "--threshold", "3.0"]) == 0
+
+
+def test_obs_diff_bench_json_mode(tmp_path, capsys):
+    tool = _load_tool("obs_diff")
+    a = {"ms_per_round": 10.0, "events": 100,
+         "provenance": {"git_rev": "aaa", "config_hash": "x"}}
+    b = {"ms_per_round": 26.0, "events": 100,
+         "provenance": {"git_rev": "bbb", "config_hash": "x"}}
+    pa, pb = tmp_path / "a.json", tmp_path / "b.json"
+    pa.write_text(json.dumps(a, indent=2) + "\n")
+    pb.write_text(json.dumps(b, indent=2) + "\n")
+    assert tool.main([str(pa), str(pb)]) == 1
+    out = capsys.readouterr().out
+    assert "ms_per_round" in out and "REGRESSION" in out
+    assert "provenance mismatch git_rev" in out
+    assert tool.main([str(pa), str(pa)]) == 0

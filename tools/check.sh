@@ -35,9 +35,15 @@
 #   tools/check.sh --obs      obs lane: the unified telemetry layer — the
 #                             recorder/stream/report units, the bit-exact
 #                             obs-on-vs-off and deterministic-stream
-#                             invariants, the serve metrics edge cases —
+#                             invariants, the causal trace layer (heap-vs-
+#                             fleet tspan parity, critical path, exporter,
+#                             obs_diff), the serve metrics edge cases —
 #                             then an end-to-end smoke: a tiny sim run with
-#                             --obs, rendered through tools/obs_report.py.
+#                             --obs --trace, rendered through
+#                             tools/obs_report.py, exported as Chrome
+#                             trace-event JSON via tools/obs_trace_export.py
+#                             and self-compared with tools/obs_diff.py
+#                             (must exit 0).
 #   tools/check.sh --docs     docs lane: runnable doctests of the repro.sim
 #                             and repro.obs public APIs, then
 #                             tools/docs_check.py — a link/anchor/code-path
@@ -77,13 +83,17 @@ elif [[ "${1:-}" == "--quant" ]]; then
 elif [[ "${1:-}" == "--obs" ]]; then
   shift
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
-    tests/test_obs.py tests/test_serve_metrics.py "$@"
+    tests/test_obs.py tests/test_obs_trace.py tests/test_serve_metrics.py "$@"
   tmp="$(mktemp -d)"; trap 'rm -rf "$tmp"' EXIT
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.sim \
     --scenario uniform_sync --devices 8 --rounds 3 \
-    --obs "$tmp/obs.jsonl" > "$tmp/sim.out"
+    --obs "$tmp/obs.jsonl" --trace > "$tmp/sim.out"
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python tools/obs_report.py \
     "$tmp/obs.jsonl"
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python tools/obs_trace_export.py \
+    "$tmp/obs.jsonl" -o "$tmp/trace.json"
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python tools/obs_diff.py \
+    "$tmp/obs.jsonl" "$tmp/obs.jsonl"
 elif [[ "${1:-}" == "--docs" ]]; then
   shift
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \

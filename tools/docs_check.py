@@ -14,8 +14,10 @@ ROADMAP.md and docs/*.md:
    with spaces, globs, ``::`` or no path separator are ignored.
 3. **API coverage**: every name in ``repro.sim.__all__`` (parsed from the
    package ``__init__.py``, no imports) must appear in docs/SIMULATOR.md —
-   and likewise ``repro.obs.__all__`` in docs/OBSERVABILITY.md — as must
-   the current trace/obs schema version strings.
+   and likewise ``repro.obs.__all__`` (folding in the ``repro.obs.trace``
+   and ``repro.obs.critical`` submodule ``__all__``) in
+   docs/OBSERVABILITY.md — as must the current trace/obs schema version
+   strings.
 
 Plus one pass over shipped artifacts: every ``BENCH_*.json`` at the repo
 root must carry the shared provenance header (``repro.obs.provenance``) so
@@ -125,10 +127,18 @@ def check_obs_api_coverage(problems: list[str]) -> None:
         return
     names: list[str] = []
     version = None
-    for node in ast.walk(ast.parse(init.read_text())):
-        if isinstance(node, ast.Assign) and any(
-                getattr(t, "id", "") == "__all__" for t in node.targets):
-            names = [ast.literal_eval(e) for e in node.value.elts]
+    # the package surface plus the trace/critical submodules' own __all__
+    # (defense in depth: a symbol dropped from the package re-export must
+    # still be documented as long as the submodule exports it)
+    for mod in (init,
+                ROOT / "src" / "repro" / "obs" / "trace.py",
+                ROOT / "src" / "repro" / "obs" / "critical.py"):
+        for node in ast.walk(ast.parse(mod.read_text())):
+            if isinstance(node, ast.Assign) and any(
+                    getattr(t, "id", "") == "__all__" for t in node.targets):
+                names += [n for n in
+                          (ast.literal_eval(e) for e in node.value.elts)
+                          if n not in names]
     for node in ast.walk(ast.parse(
             (ROOT / "src" / "repro" / "obs" / "stream.py").read_text())):
         if isinstance(node, ast.Assign) and any(

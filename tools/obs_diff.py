@@ -1,0 +1,175 @@
+#!/usr/bin/env python
+"""Diff two observability artifacts: obs JSONL streams or BENCH_*.json.
+
+Compares the metric surface of two runs and flags regressions past a
+symmetric ratio threshold (default 1.25x either direction). Inputs may be:
+
+* recorded ``repro.obs`` JSONL streams (any launcher's ``--obs``) — compared
+  on counter totals, span totals/counts (tspan kinds included as
+  ``trace/<kind>``), and histogram percentiles;
+* ``benchmarks/BENCH_*.json`` result files — compared on every numeric leaf
+  (dotted key paths), so perf trajectories show up as ratio tables.
+
+Provenance headers (git_rev / config_hash / backend) are compared too:
+mismatches warn but never fail — a diff across commits is the point.
+
+Usage:
+  python tools/obs_diff.py old.jsonl new.jsonl
+  python tools/obs_diff.py BENCH_fleet.json /tmp/BENCH_fleet.json --threshold 1.5
+  python tools/obs_diff.py a.jsonl b.jsonl --warn-only   # report, exit 0
+
+Exit status: 0 = within threshold (or --warn-only), 1 = regressions past
+threshold, 2 = unusable input.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.obs import ObsStream  # noqa: E402
+from repro.obs.report import _aggregates  # noqa: E402
+
+_HIST_KEYS = ("p50", "p90", "p99", "mean", "max")
+_PROV_KEYS = ("git_rev", "config_hash", "backend", "device_kind", "jax")
+
+
+def load_metrics(path: str) -> tuple[dict[str, float], dict]:
+    """(flat numeric metrics, provenance dict) for a stream or BENCH json."""
+    text = Path(path).read_text()
+    if text.lstrip()[:1] != "{":
+        raise ValueError(f"{path}: not JSON/JSONL")
+    try:
+        doc = json.loads(text)  # one (possibly pretty-printed) JSON object
+    except json.JSONDecodeError:
+        doc = None              # multiple lines: a JSONL obs stream
+    if isinstance(doc, dict) and doc.get("schema") != "repro.obs":
+        return _bench_metrics(doc)
+    return _stream_metrics(ObsStream.load(path))
+
+
+def _stream_metrics(stream) -> tuple[dict[str, float], dict]:
+    agg = _aggregates(stream)
+    out: dict[str, float] = {}
+    for k, v in agg.get("counters", {}).items():
+        out[f"counter:{k}"] = float(v)
+    for k, v in agg.get("spans", {}).items():
+        out[f"span_total_s:{k}"] = float(v["total_s"])
+        out[f"span_count:{k}"] = float(v["count"])
+    for k, v in agg.get("hists", {}).items():
+        if not v.get("count"):
+            continue
+        out[f"hist_count:{k}"] = float(v["count"])
+        for q in _HIST_KEYS:
+            out[f"hist_{q}:{k}"] = float(v[q])
+    return out, stream.header.get("provenance") or {}
+
+
+def _bench_metrics(doc: dict) -> tuple[dict[str, float], dict]:
+    prov = doc.get("provenance") or {}
+    out: dict[str, float] = {}
+
+    def walk(node, prefix):
+        if isinstance(node, dict):
+            for k, v in sorted(node.items()):
+                if prefix == "" and k == "provenance":
+                    continue
+                walk(v, f"{prefix}{k}.")
+        elif isinstance(node, list):
+            for i, v in enumerate(node):
+                walk(v, f"{prefix}{i}.")
+        elif isinstance(node, bool):
+            return
+        elif isinstance(node, (int, float)):
+            out[prefix[:-1]] = float(node)
+
+    walk(doc, "")
+    return out, prov
+
+
+def diff(a: dict[str, float], b: dict[str, float],
+         threshold: float) -> tuple[list, list]:
+    """(all compared rows, regression rows); rows are (key, va, vb, ratio)
+    sorted worst-first. Ratio is symmetric: max(b/a, a/b), inf when one
+    side is zero and the other is not."""
+    rows, bad = [], []
+    for k in sorted(set(a) & set(b)):
+        va, vb = a[k], b[k]
+        if va == vb:
+            ratio = 1.0
+        elif va == 0.0 or vb == 0.0:
+            ratio = float("inf")
+        else:
+            r = vb / va
+            ratio = max(r, 1.0 / r) if r > 0 else float("inf")
+        row = (k, va, vb, ratio)
+        rows.append(row)
+        if ratio > threshold:
+            bad.append(row)
+    key = lambda r: (-r[3], r[0])  # noqa: E731
+    return sorted(rows, key=key), sorted(bad, key=key)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("old", help="baseline: obs JSONL stream or BENCH_*.json")
+    ap.add_argument("new", help="candidate, same kind as baseline")
+    ap.add_argument("--threshold", type=float, default=1.25,
+                    help="symmetric ratio past which a metric is a "
+                         "regression (default 1.25)")
+    ap.add_argument("--top", type=int, default=20,
+                    help="max rows in the comparison table")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="always exit 0 (report-only mode)")
+    args = ap.parse_args(argv)
+
+    try:
+        ma, pa = load_metrics(args.old)
+        mb, pb = load_metrics(args.new)
+    except (ValueError, OSError, json.JSONDecodeError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    if not ma or not mb:
+        print("error: no numeric metrics found to compare", file=sys.stderr)
+        return 2
+
+    for k in _PROV_KEYS:
+        if k in pa and k in pb and pa[k] != pb[k]:
+            print(f"warning: provenance mismatch {k}: "
+                  f"{pa[k]} != {pb[k]}")
+
+    rows, bad = diff(ma, mb, args.threshold)
+    only_a, only_b = sorted(set(ma) - set(mb)), sorted(set(mb) - set(ma))
+    if only_a:
+        print(f"note: {len(only_a)} metric(s) only in {args.old} "
+              f"(e.g. {only_a[0]})")
+    if only_b:
+        print(f"note: {len(only_b)} metric(s) only in {args.new} "
+              f"(e.g. {only_b[0]})")
+
+    print(f"compared {len(rows)} shared metric(s), threshold "
+          f"{args.threshold:g}x:")
+    shown = rows[:max(args.top, 0)]
+    w = max((len(r[0]) for r in shown), default=6)
+    for k, va, vb, ratio in shown:
+        mark = " <-- REGRESSION" if ratio > args.threshold else ""
+        rs = f"{ratio:8.3f}x" if ratio != float("inf") else "     infx"
+        print(f"  {k.ljust(w)}  {va:14.6g} -> {vb:14.6g}  {rs}{mark}")
+    if len(rows) > len(shown):
+        print(f"  ... {len(rows) - len(shown)} more within threshold")
+
+    if bad:
+        print(f"{len(bad)} metric(s) past {args.threshold:g}x"
+              + (" (warn-only)" if args.warn_only else ""))
+        return 0 if args.warn_only else 1
+    print("ok: all shared metrics within threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,6 +8,10 @@ Usage:
 Streams come from any launcher's --obs flag:
   PYTHONPATH=src python -m repro.launch.sim --scenario straggler_tail \\
       --rounds 10 --obs obs.jsonl
+
+Streams recorded with --trace additionally get a critical-path section
+("why was this window slow?") built from their tspan events; see also
+tools/obs_trace_export.py (Perfetto) and tools/obs_diff.py (cross-run).
 """
 from __future__ import annotations
 

@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""Export a traced repro.obs stream as Chrome trace-event JSON.
+
+Converts the schema-v2 ``tspan`` events of an obs stream (recorded with any
+launcher's ``--obs ... --trace``) into the Trace Event Format that Perfetto
+(https://ui.perfetto.dev) and chrome://tracing load directly: one complete
+("ph": "X") event per span, timestamps in microseconds, one named pseudo
+thread per trace tree (chain ``c<uid>``, aggregation window ``w<win>``,
+serve request ``r<rid>``) so span trees render as stacked tracks.
+
+Usage:
+  python tools/obs_trace_export.py obs.jsonl -o trace.json
+  python tools/obs_trace_export.py obs.jsonl          # stdout
+
+Times are the stream's clock seconds (virtual seconds for simulator
+streams) scaled to microseconds; span/parent ids ride along in ``args`` so
+the causal structure survives the export.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.obs import ObsStream, spans_of  # noqa: E402
+
+_PID = 1
+
+
+def _trace_order(tid: str) -> tuple:
+    """Sort key for trace ids: chains by uid, then windows, then requests."""
+    for rank, prefix in ((0, "c"), (1, "w"), (2, "r")):
+        if tid.startswith(prefix) and tid[1:].isdigit():
+            return (rank, int(tid[1:]))
+    return (3, 0, tid)
+
+
+def export(stream) -> dict:
+    """Chrome trace-event JSON object for a loaded ``ObsStream``."""
+    spans = spans_of(stream)
+    tids = {t: i + 1 for i, t in enumerate(
+        sorted({s.trace for s in spans}, key=_trace_order))}
+    events = []
+    for trace, tid in sorted(tids.items(), key=lambda kv: kv[1]):
+        events.append({"ph": "M", "pid": _PID, "tid": tid,
+                       "name": "thread_name", "args": {"name": trace}})
+    for s in spans:
+        args = {"span": s.span, "trace": s.trace}
+        if s.parent is not None:
+            args["parent"] = s.parent
+        args.update(s.attrs)
+        events.append({
+            "ph": "X", "pid": _PID, "tid": tids[s.trace],
+            "name": s.kind, "cat": s.kind,
+            "ts": s.t0 * 1e6, "dur": (s.t1 - s.t0) * 1e6,
+            "args": args,
+        })
+    meta = {"clock": stream.header.get("clock", "?"),
+            "schema_version": stream.header.get("version")}
+    return {"traceEvents": events, "displayTimeUnit": "ms",
+            "otherData": meta}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("path", help="recorded obs JSONL stream (with tspans)")
+    ap.add_argument("-o", "--out", default="",
+                    help="output .json path ('' = stdout)")
+    args = ap.parse_args(argv)
+    stream = ObsStream.load(args.path)
+    doc = export(stream)
+    n = sum(1 for e in doc["traceEvents"] if e["ph"] == "X")
+    if not n:
+        print("error: stream has no tspan events — record it with --trace",
+              file=sys.stderr)
+        return 2
+    text = json.dumps(doc)
+    if args.out:
+        Path(args.out).write_text(text + "\n")
+        print(f"wrote {args.out}: {n} spans across "
+              f"{len(doc['traceEvents']) - n} trace tracks "
+              f"(open in https://ui.perfetto.dev)")
+    else:
+        sys.stdout.write(text + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
