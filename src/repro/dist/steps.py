@@ -129,7 +129,7 @@ def make_gossip_step(cfg: ArchConfig, mesh, gossip: GossipConfig, *,
 def make_fed_train_step(cfg: ArchConfig, mesh, gossip: GossipConfig, *,
                         lr_r: float = 5.0, beta: float = 0.9,
                         remat: bool = True, unroll: bool = False,
-                        dtype=jnp.bfloat16):
+                        dtype=jnp.bfloat16, scheduled: bool = False):
     """The DFedRW pod deployment: step_fn(params, vel, batch, step, key)
     -> (params, vel, mean_loss).
 
@@ -140,22 +140,43 @@ def make_fed_train_step(cfg: ArchConfig, mesh, gossip: GossipConfig, *,
     pod-local, no cross-pod collectives); every ``gossip.every``-th step the
     pods additionally gossip-average (quantized when quant_bits < 32).
     ``dtype`` sets the returned ``fed_abstract`` (match it to the params the
-    step will actually run on, e.g. float32 for the CPU launcher)."""
+    step will actually run on, e.g. float32 for the CPU launcher).
+
+    ``scheduled=True`` builds the trace-driven variant
+    ``step_fn(params, vel, batch, step, do_gossip, key)``: the gossip
+    trigger becomes a data operand instead of the static modulo, so a
+    recorded simulator timeline drives the deployment directly — feed one
+    element of ``SimTrace.gossip_flags()`` per step and the pods gossip
+    exactly when the simulated fleet aggregated (same compiled program for
+    every step; ``gossip.every`` is ignored)."""
     gstep, p_specs, fed_abstract = make_gossip_step(cfg, mesh, gossip, dtype=dtype)
     every = max(int(gossip.every), 1)
 
-    def step_fn(params, vel, batch, step, key):
+    def _local_step(params, vel, batch, step):
         losses, grads = jax.vmap(jax.value_and_grad(
             lambda p, b: T.loss_fn(cfg, p, b, remat=remat, unroll=unroll)
         ))(params, batch)
         lr = decreasing_lr(step + 1, r=lr_r)
         params, vel = momentum_sgd(params, vel, grads, lr, beta)
+        return params, vel, jnp.mean(losses)
+
+    if scheduled:
+        def step_fn(params, vel, batch, step, do_gossip, key):
+            params, vel, loss = _local_step(params, vel, batch, step)
+            params = jax.lax.cond(
+                do_gossip, lambda p: gstep(p, key), lambda p: p, params)
+            return params, vel, loss
+
+        return step_fn, p_specs, fed_abstract
+
+    def step_fn(params, vel, batch, step, key):
+        params, vel, loss = _local_step(params, vel, batch, step)
         if every == 1:
             params = gstep(params, key)
         else:
             params = jax.lax.cond(
                 (step + 1) % every == 0,
                 lambda p: gstep(p, key), lambda p: p, params)
-        return params, vel, jnp.mean(losses)
+        return params, vel, loss
 
     return step_fn, p_specs, fed_abstract

@@ -13,7 +13,8 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh", "make_pod_mesh", "HW"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_pod_mesh",
+           "make_metal_mesh", "HW"]
 
 
 class HW:
@@ -38,6 +39,51 @@ def make_host_mesh(data: int = 1, model: int = 1):
     model = max(1, min(model, n))
     data = max(1, min(data, n // model))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_metal_mesh(chains: int = 0, *, coordinator: str | None = None,
+                    num_processes: int = 1, process_id: int = 0):
+    """Bring-up for the trace-driven metal deployment (launch/replay.py).
+
+    Multi-process (``num_processes`` > 1): joins the ``jax.distributed``
+    coordinator first, so every process sees the deployment's global device
+    view — the live-fleet bring-up the sim-to-metal conformance harness
+    exercises. Compute itself stays process-local (per-shard programs +
+    explicit trajectory exchange): jaxlib's CPU backend refuses cross-process
+    XLA computations, and a real DFedRW fleet exchanges *messages*, not an
+    SPMD interconnect — see ``repro.sim.metal``.
+
+    Returns ``(mesh, info)``: a 1-axis ``("chains",)`` mesh over the largest
+    divisor-of-``chains`` prefix of the local devices (``chains=0`` = all of
+    them — no padding is ever needed), plus the process/device census the
+    launcher logs.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    if num_processes > 1:
+        if coordinator is None:
+            raise ValueError("multi-process bring-up needs a coordinator "
+                             "address (host:port)")
+        jax.distributed.initialize(coordinator_address=coordinator,
+                                   num_processes=num_processes,
+                                   process_id=process_id)
+    devs = jax.local_devices()
+    axis = len(devs)
+    if chains:
+        axis = 1
+        for a in range(1, min(len(devs), chains) + 1):
+            if chains % a == 0:
+                axis = a
+    mesh = Mesh(np.array(devs[:axis]), ("chains",))
+    info = {
+        "process_id": jax.process_index(),
+        "process_count": jax.process_count(),
+        "local_devices": len(devs),
+        "global_devices": jax.device_count(),
+        "mesh_axis": axis,
+    }
+    return mesh, info
 
 
 def make_pod_mesh(pods: int = 0):

@@ -22,7 +22,8 @@ from .recorder import (HIST_RESERVOIR, PausableWallClock, Recorder,
                        VirtualClock, WallClock, jax_profile, quantile_line)
 from .report import render_prometheus, render_report
 from .stream import (OBS_COMPAT_VERSIONS, OBS_SCHEMA, OBS_SCHEMA_VERSION,
-                     ObsStream, make_obs_header)
+                     ObsError, ObsFormatError, ObsSchemaError, ObsStream,
+                     make_obs_header)
 from .trace import (SPAN_KINDS, TRACE_COARSE_LIMIT, TraceSpan, TraceTree,
                     build_trees, emit_walk_window, spans_of)
 
@@ -38,6 +39,9 @@ __all__ = [
     "OBS_SCHEMA",
     "OBS_SCHEMA_VERSION",
     "OBS_COMPAT_VERSIONS",
+    "ObsError",
+    "ObsFormatError",
+    "ObsSchemaError",
     "make_obs_header",
     "provenance",
     "config_hash",

@@ -56,6 +56,9 @@ __all__ = [
     "OBS_SCHEMA",
     "OBS_SCHEMA_VERSION",
     "OBS_COMPAT_VERSIONS",
+    "ObsError",
+    "ObsFormatError",
+    "ObsSchemaError",
     "ObsStream",
     "make_obs_header",
 ]
@@ -64,6 +67,22 @@ OBS_SCHEMA = "repro.obs"
 OBS_SCHEMA_VERSION = 2
 # Versions from_lines still reads.
 OBS_COMPAT_VERSIONS = (1, 2)
+
+
+class ObsError(ValueError):
+    """Base of every typed obs-stream loading failure (subclasses
+    ValueError so pre-existing ``except ValueError`` callers keep working;
+    mirrors ``repro.sim.trace.TraceError``)."""
+
+
+class ObsFormatError(ObsError):
+    """Not a well-formed stream: truncated/corrupt JSONL, a non-object
+    line, or an event line with no ``kind``."""
+
+
+class ObsSchemaError(ObsError):
+    """A well-formed file of the wrong kind: foreign schema name or a
+    version outside ``OBS_COMPAT_VERSIONS``."""
 
 
 def make_obs_header(*, clock: str, provenance: dict | None = None,
@@ -100,15 +119,42 @@ class ObsStream:
 
     @classmethod
     def from_lines(cls, lines: Iterable[str]) -> "ObsStream":
-        it = iter(l for l in lines if l.strip())
-        header = json.loads(next(it))
+        numbered = [(i, l) for i, l in enumerate(lines, start=1) if l.strip()]
+        if not numbered:
+            raise ObsFormatError("empty obs stream: no header line")
+        lineno, head_line = numbered[0]
+        try:
+            header = json.loads(head_line)
+        except json.JSONDecodeError as e:
+            raise ObsFormatError(
+                f"line {lineno}: header is not valid JSON ({e})") from e
+        if not isinstance(header, dict):
+            raise ObsFormatError(
+                f"line {lineno}: header must be a JSON object, "
+                f"got {type(header).__name__}")
         if header.get("schema") != OBS_SCHEMA:
-            raise ValueError(f"not a {OBS_SCHEMA} file: {header.get('schema')!r}")
+            raise ObsSchemaError(
+                f"not a {OBS_SCHEMA} file: {header.get('schema')!r}")
         if header.get("version") not in OBS_COMPAT_VERSIONS:
-            raise ValueError(
+            raise ObsSchemaError(
                 f"obs stream version {header.get('version')} not in "
                 f"supported {OBS_COMPAT_VERSIONS}")
-        events = [json.loads(l) for l in it]
+        events = []
+        for lineno, line in numbered[1:]:
+            try:
+                ev = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise ObsFormatError(
+                    f"line {lineno}: truncated or corrupt event line "
+                    f"({e})") from e
+            if not isinstance(ev, dict):
+                raise ObsFormatError(
+                    f"line {lineno}: event must be a JSON object, "
+                    f"got {type(ev).__name__}")
+            if not isinstance(ev.get("kind"), str):
+                raise ObsFormatError(
+                    f"line {lineno}: event line lacks a string 'kind'")
+            events.append(ev)
         summary = None
         if events and events[-1].get("kind") == "summary":
             summary = events.pop()

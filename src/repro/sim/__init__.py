@@ -31,6 +31,14 @@ from repro.sim.devices import DeviceFleet, DeviceModelConfig
 from repro.sim.events import Event, EventQueue, UplinkQueue, UplinkStats
 from repro.sim.fleet import FleetDFedRW
 from repro.sim.hierarchy import HierarchicalLinkModel, HierLinkConfig
+from repro.sim.metal import (
+    FaultInjector,
+    LocalExchange,
+    MetalConformanceError,
+    MetalReplay,
+    MetalResult,
+    conformance_diff,
+)
 from repro.sim.links import (
     LinkModel, LinkModelConfig, make_link_model, segment_wire_bits,
     segment_wire_bits_table)
@@ -50,6 +58,11 @@ from repro.sim.trace import (
     TRACE_SCHEMA,
     TRACE_SCHEMA_VERSION,
     SimTrace,
+    TraceError,
+    TraceFormatError,
+    TraceIntegrityError,
+    TraceSchemaError,
+    WindowSchedule,
     WindowTrace,
 )
 
@@ -65,5 +78,9 @@ __all__ = [
     "SCENARIOS", "SimScenario", "SimSetup", "build_scenario", "get_scenario",
     "list_scenarios", "partitioned_topology", "register_scenario",
     "TRACE_SCHEMA", "TRACE_SCHEMA_VERSION", "TRACE_COMPAT_VERSIONS",
-    "SimTrace", "WindowTrace",
+    "SimTrace", "WindowTrace", "WindowSchedule",
+    "TraceError", "TraceFormatError", "TraceSchemaError",
+    "TraceIntegrityError",
+    "MetalReplay", "MetalResult", "MetalConformanceError", "FaultInjector",
+    "LocalExchange", "conformance_diff",
 ]

@@ -877,17 +877,29 @@ class AsyncDFedRW:
         loop, no device/link/churn models — reproducing the recorded run's
         ``SimResult`` bit-exactly (same root ``key`` required; per-window
         keys re-derive by the same splits as :meth:`run`). The engine this
-        runner wraps must match the trace header's shapes/bits."""
+        runner wraps must match the trace header's shapes/bits; the trace
+        itself is integrity-validated (window shapes vs header, sequential
+        rounds, in-range ids) up front, so a mismatched or corrupted trace
+        raises a typed error here instead of a shape failure deep inside
+        the flat engine."""
+        from repro.sim.trace import TraceIntegrityError
+
         h = trace.header
         cfg = self.engine.cfg
         expect = dict(n=self.engine.topo.n, m_chains=cfg.m_chains,
                       k_walk=cfg.k_walk, batch_size=cfg.batch_size,
                       bits=cfg.quant.bits)
-        for k_, v in expect.items():
-            if h.get(k_) != v:
-                raise ValueError(
-                    f"trace header {k_}={h.get(k_)} != engine {v}; replay "
-                    f"needs the recording configuration")
+        mismatched = {k_: (h.get(k_), v) for k_, v in expect.items()
+                      if h.get(k_) != v}
+        if mismatched:
+            detail = "; ".join(f"{k_}: trace={hv} engine={ev}"
+                               for k_, (hv, ev) in mismatched.items())
+            raise TraceIntegrityError(
+                f"trace header does not match this engine ({detail}); "
+                f"replay needs the recording configuration — rebuild the "
+                f"fleet from the trace header (launch/sim.py --replay does "
+                f"this from the recorded scenario provenance)")
+        trace.validate()
         self._reset_timeline()
 
         def step(state, sub, r):

@@ -76,7 +76,12 @@ __all__ = [
     "TRACE_SCHEMA",
     "TRACE_SCHEMA_VERSION",
     "TRACE_COMPAT_VERSIONS",
+    "TraceError",
+    "TraceFormatError",
+    "TraceSchemaError",
+    "TraceIntegrityError",
     "WindowTrace",
+    "WindowSchedule",
     "SimTrace",
     "make_header",
 ]
@@ -86,6 +91,30 @@ TRACE_SCHEMA_VERSION = 2
 # Versions from_lines still reads; v1 windows load with bits=None and replay
 # at the header's static width.
 TRACE_COMPAT_VERSIONS = (1, 2)
+
+# Header fields that pin the engine shapes a replay/deployment must match.
+TRACE_SHAPE_KEYS = ("n", "m_chains", "k_walk", "batch_size", "bits")
+
+
+class TraceError(ValueError):
+    """Base of every typed trace-loading failure (subclasses ValueError so
+    pre-existing ``except ValueError`` callers keep working)."""
+
+
+class TraceFormatError(TraceError):
+    """The bytes are not a well-formed trace: truncated/corrupt JSONL, a
+    non-object line, or a window record with missing/mistyped fields."""
+
+
+class TraceSchemaError(TraceError):
+    """A well-formed file of the wrong kind: foreign schema name or a
+    version outside ``TRACE_COMPAT_VERSIONS``."""
+
+
+class TraceIntegrityError(TraceError):
+    """Structurally valid JSONL whose windows contradict the header or each
+    other (shuffled/duplicated rounds, shape mismatches, out-of-range device
+    ids, masks that disagree) — replaying it would silently mis-execute."""
 
 
 def make_header(*, n: int, m_chains: int, k_walk: int, batch_size: int,
@@ -200,6 +229,70 @@ class WindowTrace:
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class WindowSchedule:
+    """One window of a trace compiled into a deployment-ready plan.
+
+    ``SimTrace.schedule()`` exports these: the per-window arrays of the
+    recorded :class:`WindowTrace` plus everything a live executor needs
+    resolved up front — the effective wire width (v1 windows inherit the
+    header's static width), the cumulative global step ``kbar0`` the lr
+    schedule continues from, and the header shape constants. Shapes are
+    fixed across windows ((M, K) trajectories, padded aggregation plans), so
+    one compiled program executes the whole schedule. ``repro.sim.metal``
+    consumes this; the fault-injection views (``stalled``,
+    ``dead_aggregators``) re-derive the sim's churn/straggler timeline so a
+    live run can reproduce — and verify — the same Eq. 11/14 degradation.
+    """
+
+    round: int
+    n: int                      # fleet size (header)
+    kbar0: int                  # global step count before this window (lr)
+    bits: int                   # effective wire width this window runs at
+    t_start: float
+    t_compute_end: float
+    t_end: float
+    events: int
+    devices: np.ndarray         # (M, K)
+    exec_mask: np.ndarray       # (M, K) steps the engine executed
+    account_mask: np.ndarray    # (M, K) steps Eq. 18 charges
+    timestamps: np.ndarray      # (M, K) completion instants (NaN = never)
+    bidx: np.ndarray            # (M, K, B)
+    agg_devices: np.ndarray     # (A,)  ids >= n are dropped by the scatter
+    agg_rows: np.ndarray        # (A, n_agg)
+    agg_weights: np.ndarray     # (A, n_agg) float32
+    k_planned: np.ndarray       # (M,)
+    k_done: np.ndarray          # (M,) lifetime completed steps
+    killed: np.ndarray          # (M,) churn kills
+    resumed: np.ndarray         # (M,) chains spanning past the trigger
+
+    @property
+    def m_chains(self) -> int:
+        return int(self.devices.shape[0])
+
+    @property
+    def k_exec(self) -> np.ndarray:
+        """(M,) steps each chain actually executed this window."""
+        return self.exec_mask.sum(axis=1).astype(np.int32)
+
+    @property
+    def stalled(self) -> np.ndarray:
+        """(M,) bool — chains the recorded timeline cut short (churn-killed
+        or deadline-truncated): the fault injector's stall set."""
+        return np.asarray(self.killed) | (
+            np.asarray(self.k_done) < np.asarray(self.k_planned))
+
+    @property
+    def dead_aggregators(self) -> np.ndarray:
+        """Original device ids of aggregators that were churned out when the
+        trigger fired. The runner redirects a down aggregator's scatter id
+        out of range as ``n + M + id`` (see ``_drop_down_aggregators``); this
+        inverts that encoding."""
+        ids = np.asarray(self.agg_devices)
+        oob = ids >= self.n + self.m_chains
+        return (ids[oob] - self.n - self.m_chains).astype(np.int32)
+
+
 @dataclasses.dataclass
 class SimTrace:
     """Header + per-window records; JSONL on disk (one object per line)."""
@@ -213,23 +306,161 @@ class SimTrace:
         ]
 
     @classmethod
-    def from_lines(cls, lines: Iterable[str]) -> "SimTrace":
-        it = iter(l for l in lines if l.strip())
-        header = json.loads(next(it))
+    def from_lines(cls, lines: Iterable[str],
+                   validate: bool = True) -> "SimTrace":
+        numbered = [(i, l) for i, l in enumerate(lines, start=1) if l.strip()]
+        if not numbered:
+            raise TraceFormatError("empty trace: no header line")
+        lineno, head_line = numbered[0]
+        try:
+            header = json.loads(head_line)
+        except json.JSONDecodeError as e:
+            raise TraceFormatError(
+                f"line {lineno}: header is not valid JSON ({e})") from e
+        if not isinstance(header, dict):
+            raise TraceFormatError(
+                f"line {lineno}: header must be a JSON object, "
+                f"got {type(header).__name__}")
         if header.get("schema") != TRACE_SCHEMA:
-            raise ValueError(f"not a {TRACE_SCHEMA} file: {header.get('schema')!r}")
+            raise TraceSchemaError(
+                f"not a {TRACE_SCHEMA} file: {header.get('schema')!r}")
         if header.get("version") not in TRACE_COMPAT_VERSIONS:
-            raise ValueError(
+            raise TraceSchemaError(
                 f"trace version {header.get('version')} not in "
                 f"supported {TRACE_COMPAT_VERSIONS}")
-        return cls(header=header,
-                   windows=[WindowTrace.from_json(json.loads(l)) for l in it])
+        windows = []
+        for lineno, line in numbered[1:]:
+            try:
+                obj = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise TraceFormatError(
+                    f"line {lineno}: truncated or corrupt window record "
+                    f"({e})") from e
+            if not isinstance(obj, dict):
+                raise TraceFormatError(
+                    f"line {lineno}: window record must be a JSON object, "
+                    f"got {type(obj).__name__}")
+            try:
+                windows.append(WindowTrace.from_json(obj))
+            except (KeyError, TypeError, ValueError) as e:
+                raise TraceFormatError(
+                    f"line {lineno}: bad window record "
+                    f"({type(e).__name__}: {e})") from e
+        trace = cls(header=header, windows=windows)
+        if validate:
+            trace.validate()
+        return trace
+
+    def validate(self) -> "SimTrace":
+        """Cross-check every window against the header and its neighbors;
+        raises :class:`TraceIntegrityError` (or :class:`TraceFormatError`
+        for missing header fields) instead of letting a corrupted trace
+        silently mis-replay. Returns self so loads can chain."""
+        h = self.header
+        missing = [k for k in TRACE_SHAPE_KEYS if not isinstance(
+            h.get(k), int)]
+        if missing:
+            raise TraceFormatError(
+                f"trace header lacks integer shape field(s) {missing}; "
+                f"cannot validate or replay")
+        n, m, k, b = h["n"], h["m_chains"], h["k_walk"], h["batch_size"]
+
+        def bad(i: int, w: WindowTrace, msg: str) -> TraceIntegrityError:
+            return TraceIntegrityError(
+                f"window {i} (round={w.round}): {msg}")
+
+        prev_round = None
+        for i, w in enumerate(self.windows):
+            if prev_round is not None and w.round != prev_round + 1:
+                raise bad(i, w, f"round ids not sequential (previous was "
+                                f"{prev_round}; duplicated, shuffled or "
+                                f"dropped windows?)")
+            prev_round = w.round
+            if w.devices.shape != (m, k):
+                raise bad(i, w, f"devices shape {w.devices.shape} != header "
+                                f"(m_chains, k_walk) = {(m, k)}")
+            for name in ("exec_mask", "account_mask", "timestamps"):
+                arr = getattr(w, name)
+                if arr.shape != (m, k):
+                    raise bad(i, w, f"{name} shape {arr.shape} != {(m, k)}")
+            if w.bidx.shape != (m, k, b):
+                raise bad(i, w, f"bidx shape {w.bidx.shape} != "
+                                f"(m_chains, k_walk, batch_size) = {(m, k, b)}")
+            for name in ("k_planned", "k_done", "killed", "resumed"):
+                arr = getattr(w, name)
+                if arr.shape != (m,):
+                    raise bad(i, w, f"{name} shape {arr.shape} != ({m},)")
+            if w.devices.min(initial=0) < 0 or w.devices.max(initial=0) >= n:
+                raise bad(i, w, f"device id out of range [0, {n})")
+            if (w.exec_mask & ~w.account_mask).any():
+                raise bad(i, w, "exec_mask marks steps outside account_mask "
+                                "(executed work that was never planned)")
+            if w.bidx.min(initial=0) < 0:
+                raise bad(i, w, "negative batch index")
+            a = w.agg_devices.shape[0]
+            if w.agg_rows.ndim != 2 or w.agg_rows.shape[0] != a \
+                    or w.agg_weights.shape != w.agg_rows.shape:
+                raise bad(i, w, f"aggregation plan shapes disagree: "
+                                f"agg_devices ({a},), agg_rows "
+                                f"{w.agg_rows.shape}, agg_weights "
+                                f"{w.agg_weights.shape}")
+            if w.agg_devices.min(initial=0) < 0 or \
+                    w.agg_rows.min(initial=0) < 0:
+                raise bad(i, w, "negative aggregation ids")
+            if not np.isfinite(w.agg_weights).all() or \
+                    (w.agg_weights < 0).any():
+                raise bad(i, w, "aggregation weights must be finite and "
+                                "non-negative")
+            if not (w.t_start <= w.t_compute_end <= w.t_end) or \
+                    not math.isfinite(w.t_end):
+                raise bad(i, w, f"window times not ordered: t_start="
+                                f"{w.t_start} t_compute_end={w.t_compute_end} "
+                                f"t_end={w.t_end}")
+            if w.bits is not None and not (1 <= int(w.bits) <= 32):
+                raise bad(i, w, f"window bits {w.bits} outside [1, 32]")
+        return self
+
+    def schedule(self) -> list["WindowSchedule"]:
+        """Compile the trace into per-window fixed-shape deployment plans
+        (validates first — a corrupted trace raises instead of exporting).
+        This is the contract between the simulator and the live executors:
+        ``repro.sim.metal`` drives each :class:`WindowSchedule` through real
+        devices, `launch/replay.py` distributes them across processes."""
+        self.validate()
+        h, k_walk = self.header, self.header["k_walk"]
+        out, kbar0 = [], 0
+        for w in self.windows:
+            out.append(WindowSchedule(
+                round=w.round, n=h["n"], kbar0=kbar0,
+                bits=h["bits"] if w.bits is None else int(w.bits),
+                t_start=w.t_start, t_compute_end=w.t_compute_end,
+                t_end=w.t_end, events=w.events, devices=w.devices,
+                exec_mask=w.exec_mask, account_mask=w.account_mask,
+                timestamps=w.timestamps, bidx=w.bidx,
+                agg_devices=w.agg_devices, agg_rows=w.agg_rows,
+                agg_weights=w.agg_weights, k_planned=w.k_planned,
+                k_done=w.k_done, killed=w.killed, resumed=w.resumed))
+            kbar0 += k_walk   # execute_round advances global_step by k_walk
+        return out
+
+    def gossip_flags(self) -> np.ndarray:
+        """(windows * k_walk,) bool — True at each window's final local
+        step, i.e. the steps where the recorded timeline fired an
+        aggregation trigger. This is the bridge onto the pod deployment:
+        feed it to a schedule-driven ``make_fed_train_step`` (dist/steps.py)
+        so the pods gossip exactly when the simulated fleet aggregated."""
+        self.validate()
+        k = self.header["k_walk"]
+        flags = np.zeros(len(self.windows) * k, dtype=bool)
+        if k:
+            flags[k - 1::k] = True
+        return flags
 
     def save(self, path: str) -> None:
         with open(path, "w") as f:
             f.write("\n".join(self.to_lines()) + "\n")
 
     @classmethod
-    def load(cls, path: str) -> "SimTrace":
+    def load(cls, path: str, validate: bool = True) -> "SimTrace":
         with open(path) as f:
-            return cls.from_lines(f)
+            return cls.from_lines(f, validate=validate)

@@ -1,0 +1,376 @@
+"""Sim-to-metal conformance: a recorded SimTrace replayed on live devices
+(repro.sim.metal.MetalReplay) must reproduce the simulator's trajectory.
+
+Contract (see src/repro/sim/metal.py):
+  * fp32 — bit-exact (conformance_diff == 0.0), any device/process count;
+  * bits<32 — within ``tolerance_factor x`` the sim's own different-root-key
+    replay spread (the stochastic quantizer draws per-shard streams);
+  * faults — the injector re-derives exec masks / dead aggregators from the
+    recorded churn+straggler timeline and must land on the sim's Eq. 11/14
+    partial aggregation, raising MetalConformanceError on divergence;
+  * telemetry — the metal obs stream diffs clean against the sim stream
+    (tools/obs_diff.py is the regression gate).
+
+Fast tests run in-process on however many devices the host has (1 in the
+tier-1 lane — the walk compiles to a plain jit; the conformance claim is
+exactly that device count cannot change a bit). The @slow subprocess tests
+drive the real launcher (launch/replay.py) on 8 virtual devices, including
+the self-spawned two-process deployment with its TCP trajectory exchange.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.dfedrw import DFedRW
+from repro.sim import (
+    FaultInjector,
+    LocalExchange,
+    MetalConformanceError,
+    MetalReplay,
+    SimTrace,
+    TraceIntegrityError,
+    build_scenario,
+    conformance_diff,
+)
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+TOOLS = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                     "tools"))
+
+KEY_SEED = 7
+
+
+def _record(scenario, *, seed, rounds, with_obs=False, **overrides):
+    from repro.obs import Recorder, VirtualClock
+    setup = build_scenario(scenario, n=12, seed=seed, rounds=rounds,
+                           **overrides)
+    runner = setup.runner()
+    rec = None
+    if with_obs:
+        rec = Recorder(clock=VirtualClock())
+        runner.attach_obs(rec)
+    res = runner.run(setup.rounds, jax.random.PRNGKey(KEY_SEED),
+                     setup.x_test, setup.y_test, record=True)
+    return setup, res, rec
+
+
+@pytest.fixture(scope="module")
+def fp32_run():
+    return _record("uniform_sync", seed=0, rounds=4, with_obs=True)
+
+
+@pytest.fixture(scope="module")
+def quant_run():
+    return _record("uniform_sync", seed=0, rounds=4, bits=8)
+
+
+@pytest.fixture(scope="module")
+def churn_run():
+    return _record("churn_dropout", seed=1, rounds=5)
+
+
+def _metal(setup, trace, *, with_obs=False, fault=None):
+    from repro.obs import Recorder, VirtualClock
+    engine = DFedRW(setup.model, setup.data, setup.topo, setup.cfg)
+    metal = MetalReplay(engine)
+    rec = None
+    if with_obs:
+        rec = Recorder(clock=VirtualClock())
+        metal.attach_obs(rec)
+    result = metal.run(trace, jax.random.PRNGKey(KEY_SEED),
+                       setup.x_test, setup.y_test, fault=fault)
+    return metal, result, rec
+
+
+@pytest.fixture(scope="module")
+def metal_fp32(fp32_run):
+    setup, res, _ = fp32_run
+    return _metal(setup, res.trace, with_obs=True)
+
+
+# ----------------------------------------------------------------- fp32 exact
+def test_fp32_bit_exact(fp32_run, metal_fp32):
+    _, res, _ = fp32_run
+    _, mres, _ = metal_fp32
+    assert conformance_diff(res, mres) == 0.0
+    assert mres.windows == len(res.trace.windows)
+    assert mres.n_shards == 1
+
+
+def test_fp32_history_and_accounting_match(fp32_run, metal_fp32):
+    """Same trajectory must mean same evals, same losses, same Eq. 18
+    communication bill — the metal result is the sim result, not merely a
+    nearby one."""
+    _, res, _ = fp32_run
+    _, mres, _ = metal_fp32
+    assert mres.history.test_accuracy == res.history.test_accuracy
+    assert mres.history.train_loss == res.history.train_loss
+    assert mres.history.gamma_hat == res.history.gamma_hat
+    assert mres.history.comm_bits == res.history.comm_bits
+    assert mres.state.round == res.state.round
+    assert mres.state.global_step == res.state.global_step
+    assert mres.state.comm_bits_total == res.state.comm_bits_total
+    assert mres.state.comm_bits_busiest == res.state.comm_bits_busiest
+    assert np.array_equal(mres.state.updated, res.state.updated)
+
+
+def test_fp32_metal_replay_is_deterministic(fp32_run, metal_fp32):
+    setup, res, _ = fp32_run
+    _, first, _ = metal_fp32
+    _, again, _ = _metal(setup, res.trace)
+    assert conformance_diff(first, again) == 0.0
+
+
+# ------------------------------------------------------------ bits<32 banded
+def test_quantized_within_sim_spread(quant_run):
+    """bits=8: per-shard quantizer keys mean metal is a *different valid
+    draw*, bounded by the sim's own sensitivity to the root key."""
+    setup, res, _ = quant_run
+    alt = setup.runner().replay(res.trace, jax.random.PRNGKey(99),
+                                setup.x_test, setup.y_test)
+    spread = conformance_diff(res, alt)
+    assert spread > 0.0
+    _, mres, _ = _metal(setup, res.trace)
+    diff = conformance_diff(res, mres)
+    assert diff <= 4.0 * spread, (diff, spread)
+
+
+# ------------------------------------------------------------ fault injection
+def test_fault_injection_reproduces_partial_aggregation(churn_run):
+    setup, res, _ = churn_run
+    fi = FaultInjector(policy=setup.sim.policy)
+    _, mres, _ = _metal(setup, res.trace, fault=fi)
+    assert conformance_diff(res, mres) == 0.0
+    assert fi.stalls_injected > 0
+    assert fi.steps_stalled > 0
+    assert fi.aggregators_dropped > 0
+    assert mres.fault is fi
+
+
+def test_fault_injector_detects_divergence(churn_run):
+    """A tampered recording (exec mask disagreeing with the fault evidence)
+    must be caught, not silently aggregated."""
+    setup, res, _ = churn_run
+    w = res.trace.schedule()[0]
+    tampered = np.asarray(w.exec_mask).copy()
+    tampered[0, 0] = ~tampered[0, 0]
+    bad = dataclasses.replace(w, exec_mask=tampered)
+    fi = FaultInjector(policy=setup.sim.policy)
+    with pytest.raises(MetalConformanceError, match="exec mask"):
+        fi.inject(bad)
+
+
+def test_fault_injector_stall_scale_sleeps(churn_run, monkeypatch):
+    """stall_scale > 0 turns the recorded straggler deficit into real
+    process stalls (one sleep per window, proportional to missing steps)."""
+    setup, res, _ = churn_run
+    sched = res.trace.schedule()
+    w = next(w for w in sched
+             if (np.asarray(w.k_planned) > np.asarray(w.k_done)).any())
+    slept = []
+    monkeypatch.setattr("repro.sim.metal.time.sleep",
+                        lambda s: slept.append(s))
+    fi = FaultInjector(policy=setup.sim.policy, stall_scale=0.25)
+    fi.inject(w)
+    deficit = int(np.maximum(
+        np.asarray(w.k_planned) - np.asarray(w.k_done), 0).sum())
+    assert slept == [0.25 * deficit]
+
+
+def test_derive_exec_mask_drop_policy(churn_run):
+    """Under 'drop', stalled chains are excised entirely (every step), not
+    merely truncated."""
+    setup, res, _ = churn_run
+    sched = res.trace.schedule()
+    w = next(w for w in sched if np.asarray(w.stalled).any())
+    partial = FaultInjector(policy="partial").derive_exec_mask(w)
+    dropped = FaultInjector(policy="drop", verify=False).derive_exec_mask(w)
+    stalled = np.asarray(w.stalled)
+    assert not dropped[stalled].any()
+    assert np.array_equal(dropped[~stalled], partial[~stalled])
+
+
+# ----------------------------------------------------- schedule/flags exports
+def test_schedule_export_contract(fp32_run):
+    setup, res, _ = fp32_run
+    trace = res.trace
+    k = setup.cfg.k_walk
+    sched = trace.schedule()
+    assert [w.kbar0 for w in sched] == [i * k for i in range(len(sched))]
+    assert [w.round for w in sched] == [w.round for w in trace.windows]
+    assert all(w.bits == trace.header["bits"] for w in sched)
+    assert all(w.n == trace.header["n"] for w in sched)
+    flags = trace.gossip_flags()
+    assert flags.shape == (len(sched) * k,)
+    assert flags[k - 1::k].all()
+    assert flags.sum() == len(sched)
+
+
+# ------------------------------------------------- mismatch/corruption guards
+def test_metal_rejects_mismatched_engine(fp32_run):
+    setup, res, _ = fp32_run
+    cfg2 = dataclasses.replace(setup.cfg, m_chains=setup.cfg.m_chains + 1)
+    engine = DFedRW(setup.model, setup.data, setup.topo, cfg2)
+    with pytest.raises(TraceIntegrityError, match="m_chains"):
+        MetalReplay(engine).run(res.trace, jax.random.PRNGKey(0))
+
+
+def test_sim_replay_rejects_mismatched_engine(fp32_run, quant_run):
+    """AsyncDFedRW.replay validates the header up front: a bits=8 fleet fed
+    the fp32 recording fails with the offending keys named, not a shape
+    error inside the flat engine."""
+    _, res, _ = fp32_run
+    qsetup, _, _ = quant_run
+    with pytest.raises(TraceIntegrityError, match="bits: trace=32 engine=8"):
+        qsetup.runner().replay(res.trace, jax.random.PRNGKey(KEY_SEED))
+
+
+def test_sim_replay_rejects_corrupted_window(fp32_run):
+    setup, res, _ = fp32_run
+    trace = res.trace
+    bad_dev = np.asarray(trace.windows[1].devices).copy()
+    bad_dev[0, 0] = -1
+    windows = list(trace.windows)
+    windows[1] = dataclasses.replace(windows[1], devices=bad_dev)
+    corrupt = SimTrace(header=dict(trace.header), windows=windows)
+    with pytest.raises(TraceIntegrityError, match="window 1"):
+        setup.runner().replay(corrupt, jax.random.PRNGKey(KEY_SEED))
+
+
+# -------------------------------------------------------------- obs/telemetry
+def test_obs_diff_sim_vs_metal_is_clean(fp32_run, metal_fp32, tmp_path):
+    """The sim-vs-metal telemetry gate: both streams record the same spans
+    and counters on the same virtual clock, so tools/obs_diff.py exits 0."""
+    _, _, rec_sim = fp32_run
+    _, _, rec_metal = metal_fp32
+    sim_path = tmp_path / "sim_obs.jsonl"
+    metal_path = tmp_path / "metal_obs.jsonl"
+    rec_sim.save(str(sim_path), workload="sim")
+    rec_metal.save(str(metal_path), workload="metal")
+    if TOOLS not in sys.path:
+        sys.path.insert(0, TOOLS)
+    import obs_diff
+    assert obs_diff.main([str(sim_path), str(metal_path)]) == 0
+
+
+# -------------------------------------------------------------- the exchange
+def test_local_exchange_identity():
+    ex = LocalExchange()
+    assert ex.n_shards == 1 and ex.shard_id == 0
+    assert ex.allgather(("a", 1)) == [("a", 1)]
+
+
+def test_socket_exchange_allgather_round():
+    """The TCP message plane, two ranks in-process: both must see the same
+    rank-ordered payload list."""
+    from repro.launch.replay import SocketExchange, _free_port
+    port = _free_port()
+    out = {}
+
+    def run_rank(rank):
+        ex = SocketExchange(2, rank, "127.0.0.1", port, timeout_s=30.0)
+        for _ in range(2):                       # two rounds over one link
+            out[rank] = ex.allgather({"rank": rank})
+        ex.close()
+
+    t = threading.Thread(target=run_rank, args=(1,))
+    t.start()
+    run_rank(0)
+    t.join(timeout=30.0)
+    assert not t.is_alive()
+    assert out[0] == out[1] == [{"rank": 0}, {"rank": 1}]
+
+
+# ------------------------------------------------------- slow lane (8 devices)
+def _run_sub(code: str) -> subprocess.CompletedProcess:
+    return subprocess.run([sys.executable, "-c", code],
+                          capture_output=True, text=True, timeout=600)
+
+
+@pytest.mark.slow
+def test_cli_replay_check_single_process(tmp_path):
+    """launch/sim.py --record -> launch/replay.py --check on 8 virtual
+    devices: real shard_map over the chains axis, fp32 bit-exact."""
+    trace = str(tmp_path / "trace.jsonl")
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys
+        sys.path.insert(0, {SRC!r})
+        from repro.launch.sim import main as sim_main
+        from repro.launch.replay import main as replay_main
+        sim_main(["--scenario", "uniform_sync", "--n", "12", "--rounds", "4",
+                  "--eval-every", "2", "--record", {trace!r}])
+        rc = replay_main(["--trace", {trace!r}, "--check"])
+        assert rc == 0, rc
+        print("CLI_REPLAY_OK")
+    """)
+    r = _run_sub(code)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "CLI_REPLAY_OK" in r.stdout
+    assert "conformance:" in r.stdout and "-> OK" in r.stdout
+    assert "bit-exact (fp32)" in r.stdout
+
+
+@pytest.mark.slow
+def test_cli_replay_two_process_deployment(tmp_path):
+    """The full multi-host bring-up: 2 spawned processes join a
+    jax.distributed coordinator (4 virtual devices each -> 8 global),
+    exchange trajectories over TCP, digest-compare their device matrices,
+    and the rank-0 --check holds the result to the sim."""
+    trace = str(tmp_path / "trace.jsonl")
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        os.environ["PYTHONPATH"] = {SRC!r}
+        import sys
+        sys.path.insert(0, {SRC!r})
+        from repro.launch.sim import main as sim_main
+        from repro.launch.replay import main as replay_main
+        sim_main(["--scenario", "uniform_sync", "--n", "12", "--rounds", "3",
+                  "--eval-every", "3", "--record", {trace!r}])
+        rc = replay_main(["--trace", {trace!r}, "--processes", "2",
+                          "--host-devices", "4", "--check"])
+        assert rc == 0, rc
+        print("CLI_MULTIPROC_OK")
+    """)
+    r = _run_sub(code)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "CLI_MULTIPROC_OK" in r.stdout
+    assert "shards agree" in r.stdout
+    assert "conformance:" in r.stdout and "-> OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_cli_replay_fault_injection(tmp_path):
+    """Churn/straggler timeline replayed with --fault-inject: the live
+    degradation must reproduce the sim's partial aggregation bit-exactly."""
+    trace = str(tmp_path / "trace.jsonl")
+    obs = str(tmp_path / "metal_obs.jsonl")
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys
+        sys.path.insert(0, {SRC!r})
+        from repro.launch.sim import main as sim_main
+        from repro.launch.replay import main as replay_main
+        sim_main(["--scenario", "churn_dropout", "--n", "12", "--rounds", "5",
+                  "--eval-every", "5", "--record", {trace!r}])
+        rc = replay_main(["--trace", {trace!r}, "--check", "--fault-inject",
+                          "--obs", {obs!r}])
+        assert rc == 0, rc
+        print("CLI_FAULT_OK")
+    """)
+    r = _run_sub(code)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "CLI_FAULT_OK" in r.stdout
+    assert "faults verified" in r.stdout
+    assert "conformance:" in r.stdout and "-> OK" in r.stdout
+    assert os.path.exists(obs)

@@ -1,0 +1,197 @@
+"""Golden-file regression tests for the obs tooling.
+
+The committed artifacts under ``tests/golden/`` pin both the on-disk obs
+stream format and the tools' outputs:
+
+  * ``obs_traced.jsonl``        — a schema-v2 stream with causal tspans
+  * ``obs_traced_export.json``  — its Perfetto/Chrome trace-event export
+  * ``obs_base.jsonl``          — a counters/spans stream (diff baseline)
+  * ``obs_regressed.jsonl``     — the same stream pushed past the 1.25x
+                                  obs_diff threshold on one counter
+
+The builders below regenerate those streams deterministically (virtual
+clock, no provenance), so the tests assert byte-stability: if the recorder
+or a tool changes its output format, the goldens fail loudly instead of the
+format drifting silently. Regenerate after an *intentional* change with:
+
+    PYTHONPATH=src python tests/test_obs_golden.py --regen
+"""
+import json
+import os
+import sys
+
+import pytest
+
+from repro.obs import ObsStream, Recorder, VirtualClock
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden")
+TOOLS = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                     "tools"))
+if TOOLS not in sys.path:
+    sys.path.insert(0, TOOLS)
+
+import obs_diff  # noqa: E402
+import obs_trace_export  # noqa: E402
+
+
+def build_traced_stream() -> ObsStream:
+    """One aggregation window (w0) over two chains (c0, c1) with per-step
+    causal spans — the smallest stream exercising every export feature:
+    parents, attrs, multiple trace trees, metadata threads."""
+    rec = Recorder(clock=VirtualClock(lambda: 4.0), trace=True)
+    rec.trace_span("hop", trace="c0", span="c0.h0", t0=0.0, t1=0.5,
+                   win=0, dev=3)
+    rec.trace_span("sgd", trace="c0", span="c0.s0", parent="c0.h0",
+                   t0=0.5, t1=1.5, win=0, dev=3)
+    rec.trace_span("transfer", trace="c0", span="c0.x0", parent="c0.s0",
+                   t0=1.5, t1=2.0, win=0, dev=3, bits=8)
+    rec.trace_span("hop", trace="c1", span="c1.h0", t0=0.0, t1=0.25,
+                   win=0, dev=7)
+    rec.trace_span("sgd", trace="c1", span="c1.s0", parent="c1.h0",
+                   t0=0.25, t1=1.75, win=0, dev=7)
+    rec.trace_span("queue_wait", trace="c1", span="c1.q0", parent="c1.s0",
+                   t0=1.75, t1=2.5, win=0, dev=7)
+    rec.trace_span("aggregate", trace="w0", span="w0.agg", t0=3.0, t1=4.0,
+                   win=0, writers=2)
+    rec.record_span("sim/window", 0.0, 4.0)
+    rec.counter("sim/windows")
+    rec.flush(t=4.0)
+    return rec.to_stream(workload="golden", scenario="traced")
+
+
+def build_diff_pair() -> tuple[ObsStream, ObsStream]:
+    """Baseline + regressed copies of one telemetry shape: the regressed
+    stream doubles ``engine/comm_bits`` (2.0x > the 1.25x threshold) and
+    keeps everything else identical."""
+    def build(comm_bits: float) -> ObsStream:
+        rec = Recorder(clock=VirtualClock(lambda: 8.0))
+        for r in range(4):
+            t0, t1 = 2.0 * r, 2.0 * r + 2.0
+            rec.record_span("engine/execute_round", t1, t1)
+            rec.record_span("sim/window", t0, t1)
+            rec.counter("engine/rounds")
+            rec.counter("engine/comm_bits", comm_bits, bits=32)
+            rec.histogram("sim/window_steps", [5.0, 5.0, 4.0])
+            rec.gauge("sim/bits", 32.0)
+            rec.flush(t=t1)
+        return rec.to_stream(workload="golden", scenario="diff_pair")
+
+    return build(1.0e6), build(2.0e6)
+
+
+def _golden_lines(name: str) -> list:
+    with open(os.path.join(GOLDEN, name)) as f:
+        return f.read().splitlines()
+
+
+def _golden_json(name: str) -> dict:
+    with open(os.path.join(GOLDEN, name)) as f:
+        return json.load(f)
+
+
+# -------------------------------------------------------------- byte parity
+def test_traced_stream_matches_golden():
+    assert build_traced_stream().to_lines() == _golden_lines(
+        "obs_traced.jsonl")
+
+
+def test_diff_pair_matches_golden():
+    base, regressed = build_diff_pair()
+    assert base.to_lines() == _golden_lines("obs_base.jsonl")
+    assert regressed.to_lines() == _golden_lines("obs_regressed.jsonl")
+
+
+# ------------------------------------------------------------ perfetto export
+def test_export_matches_golden():
+    stream = ObsStream.from_lines(_golden_lines("obs_traced.jsonl"))
+    assert obs_trace_export.export(stream) == _golden_json(
+        "obs_traced_export.json")
+
+
+def test_export_is_schema_valid_trace_event_json():
+    doc = _golden_json("obs_traced_export.json")
+    assert doc["displayTimeUnit"] == "ms"
+    assert doc["otherData"]["clock"] == "virtual"
+    events = doc["traceEvents"]
+    metas = [e for e in events if e["ph"] == "M"]
+    spans = [e for e in events if e["ph"] == "X"]
+    assert len(events) == len(metas) + len(spans)
+    assert {m["args"]["name"] for m in metas} == {"c0", "c1", "w0"}
+    assert len(spans) == 7
+    tids = {m["args"]["name"]: m["tid"] for m in metas}
+    for e in spans:
+        assert e["ts"] >= 0.0 and e["dur"] > 0.0         # microseconds
+        assert e["tid"] == tids[e["args"]["trace"]]
+        assert isinstance(e["name"], str) and e["cat"] == e["name"]
+    # causal structure survives the export
+    sgd = next(e for e in spans if e["args"]["span"] == "c0.s0")
+    assert sgd["args"]["parent"] == "c0.h0"
+    assert sgd["ts"] == pytest.approx(0.5e6)
+    assert sgd["dur"] == pytest.approx(1.0e6)
+
+
+def test_export_cli_writes_file_and_exits_zero(tmp_path):
+    out = tmp_path / "trace.json"
+    rc = obs_trace_export.main([os.path.join(GOLDEN, "obs_traced.jsonl"),
+                                "-o", str(out)])
+    assert rc == 0
+    assert json.loads(out.read_text()) == _golden_json(
+        "obs_traced_export.json")
+
+
+def test_export_cli_rejects_stream_without_tspans():
+    rc = obs_trace_export.main([os.path.join(GOLDEN, "obs_base.jsonl"),
+                                "-o", os.devnull])
+    assert rc == 2
+
+
+# ------------------------------------------------------------- obs_diff gate
+def test_obs_diff_clean_exits_zero():
+    path = os.path.join(GOLDEN, "obs_base.jsonl")
+    assert obs_diff.main([path, path]) == 0
+
+
+def test_obs_diff_regression_exits_one():
+    assert obs_diff.main([os.path.join(GOLDEN, "obs_base.jsonl"),
+                          os.path.join(GOLDEN, "obs_regressed.jsonl")]) == 1
+
+
+def test_obs_diff_warn_only_downgrades_to_zero():
+    assert obs_diff.main([os.path.join(GOLDEN, "obs_base.jsonl"),
+                          os.path.join(GOLDEN, "obs_regressed.jsonl"),
+                          "--warn-only"]) == 0
+
+
+def test_obs_diff_wider_threshold_passes():
+    assert obs_diff.main([os.path.join(GOLDEN, "obs_base.jsonl"),
+                          os.path.join(GOLDEN, "obs_regressed.jsonl"),
+                          "--threshold", "2.5"]) == 0
+
+
+def test_obs_diff_foreign_file_exits_two(tmp_path):
+    bogus = tmp_path / "not_obs.jsonl"
+    bogus.write_text('{"schema": "something.else", "version": 1}\n'
+                     '{"kind": "flush", "t": 0.0}\n')
+    base = os.path.join(GOLDEN, "obs_base.jsonl")
+    assert obs_diff.main([base, str(bogus)]) == 2
+
+
+def _regen() -> None:
+    os.makedirs(GOLDEN, exist_ok=True)
+    build_traced_stream().save(os.path.join(GOLDEN, "obs_traced.jsonl"))
+    base, regressed = build_diff_pair()
+    base.save(os.path.join(GOLDEN, "obs_base.jsonl"))
+    regressed.save(os.path.join(GOLDEN, "obs_regressed.jsonl"))
+    doc = obs_trace_export.export(
+        ObsStream.load(os.path.join(GOLDEN, "obs_traced.jsonl")))
+    with open(os.path.join(GOLDEN, "obs_traced_export.json"), "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"regenerated goldens under {GOLDEN}")
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        print(__doc__)

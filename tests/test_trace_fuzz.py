@@ -1,0 +1,272 @@
+"""Negative/property suite for the versioned loaders (SimTrace, ObsStream).
+
+The trace is the deployment's schedule artifact (repro.sim.metal executes
+it on live devices), so a corrupted file must raise a *typed* error at load
+time — truncation, shuffling, duplicated windows, mask corruption, foreign
+schemas — never a silent mis-replay or a shape error deep inside the flat
+engine. Property-based (hypothesis-compatible via _hypothesis_compat):
+every random corruption from the catalogue must surface as a TraceError /
+ObsError subclass, and an uncorrupted round trip must stay loadable."""
+import json
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.obs import (
+    ObsError,
+    ObsFormatError,
+    ObsSchemaError,
+    ObsStream,
+    make_obs_header,
+)
+from repro.sim import (
+    SimTrace,
+    TraceError,
+    TraceFormatError,
+    TraceIntegrityError,
+    TraceSchemaError,
+)
+from repro.sim.trace import WindowTrace, make_header
+
+N, M, K, B = 6, 3, 4, 2
+
+
+def _window(r: int, rng: np.random.Generator) -> WindowTrace:
+    devices = rng.integers(0, N, size=(M, K)).astype(np.int32)
+    mask = np.ones((M, K), dtype=bool)
+    ts = np.cumsum(rng.random((M, K)), axis=1)
+    return WindowTrace(
+        round=r, t_start=float(r), t_compute_end=float(r) + 0.5,
+        t_end=float(r) + 0.7, agg_latency_s=0.2, events=M * K,
+        host_loop_s=0.0,
+        k_planned=np.full(M, K, dtype=np.int32),
+        k_done=np.full(M, K, dtype=np.int32),
+        killed=np.zeros(M, dtype=bool), resumed=np.zeros(M, dtype=bool),
+        devices=devices, exec_mask=mask, account_mask=mask.copy(),
+        timestamps=ts,
+        bidx=rng.integers(0, 40, size=(M, K, B)).astype(np.int64),
+        agg_devices=np.array([0, 2], dtype=np.int32),
+        agg_rows=np.array([[1, 3], [2, 4]], dtype=np.int32),
+        agg_weights=np.array([[0.5, 0.5], [0.25, 0.75]], dtype=np.float32),
+        bits=32)
+
+
+def _trace(windows: int = 3, seed: int = 0) -> SimTrace:
+    rng = np.random.default_rng(seed)
+    head = make_header(n=N, m_chains=M, k_walk=K, batch_size=B, bits=32,
+                       policy="partial", deadline_s=None)
+    return SimTrace(header=head,
+                    windows=[_window(r + 1, rng) for r in range(windows)])
+
+
+def _lines(seed: int = 0) -> list:
+    return _trace(seed=seed).to_lines()
+
+
+# ----------------------------------------------------------- the catalogue
+# name -> (mutator(lines) -> lines, expected error class). Mutators operate
+# on the serialized JSONL so they model real on-disk corruption.
+
+def _mut_json(lines, wix, fn):
+    """Edit window ``wix`` (0-based) through its JSON object."""
+    obj = json.loads(lines[1 + wix])
+    fn(obj)
+    out = list(lines)
+    out[1 + wix] = json.dumps(obj)
+    return out
+
+
+TRACE_CORRUPTIONS = {
+    "empty": (lambda ls: [], TraceFormatError),
+    "blank_lines_only": (lambda ls: ["", "   ", ""], TraceFormatError),
+    "truncated_last_line": (lambda ls: ls[:-1] + [ls[-1][: len(ls[-1]) // 2]],
+                            TraceFormatError),
+    "truncated_header": (lambda ls: [ls[0][:-5]] + ls[1:], TraceFormatError),
+    "header_not_object": (lambda ls: ["[1, 2, 3]"] + ls[1:],
+                          TraceFormatError),
+    "window_not_object": (lambda ls: ls[:2] + ["42"] + ls[2:],
+                          TraceFormatError),
+    "foreign_schema": (
+        lambda ls: [json.dumps({**json.loads(ls[0]), "schema": "acme.trace"})]
+        + ls[1:], TraceSchemaError),
+    "future_version": (
+        lambda ls: [json.dumps({**json.loads(ls[0]), "version": 99})]
+        + ls[1:], TraceSchemaError),
+    "missing_field": (
+        lambda ls: _mut_json(ls, 0, lambda o: o.pop("devices")),
+        TraceFormatError),
+    "mistyped_field": (
+        lambda ls: _mut_json(ls, 0, lambda o: o.update(devices="zap")),
+        TraceFormatError),
+    "header_shape_not_int": (
+        lambda ls: [json.dumps({**json.loads(ls[0]), "m_chains": "three"})]
+        + ls[1:], TraceFormatError),
+    "shuffled_windows": (lambda ls: [ls[0], ls[2], ls[1], ls[3]],
+                         TraceIntegrityError),
+    "duplicate_window": (lambda ls: ls + [ls[-1]], TraceIntegrityError),
+    "dropped_window": (lambda ls: [ls[0], ls[1], ls[3]],
+                       TraceIntegrityError),
+    "device_out_of_range": (
+        lambda ls: _mut_json(
+            ls, 1, lambda o: o["devices"][0].__setitem__(0, N + 7)),
+        TraceIntegrityError),
+    "negative_device": (
+        lambda ls: _mut_json(
+            ls, 1, lambda o: o["devices"][0].__setitem__(0, -1)),
+        TraceIntegrityError),
+    "exec_outside_account": (
+        lambda ls: _mut_json(
+            ls, 1, lambda o: o["account_mask"][0].__setitem__(0, False)),
+        TraceIntegrityError),
+    "negative_bidx": (
+        lambda ls: _mut_json(
+            ls, 2, lambda o: o["bidx"][0][0].__setitem__(0, -3)),
+        TraceIntegrityError),
+    "wrong_devices_shape": (
+        lambda ls: _mut_json(ls, 0, lambda o: o["devices"].pop()),
+        TraceIntegrityError),
+    "wrong_kplanned_shape": (
+        lambda ls: _mut_json(ls, 0, lambda o: o["k_planned"].append(1)),
+        TraceIntegrityError),
+    "agg_plan_shape_mismatch": (
+        lambda ls: _mut_json(ls, 0, lambda o: o["agg_rows"].pop()),
+        TraceIntegrityError),
+    "negative_agg_weight": (
+        lambda ls: _mut_json(
+            ls, 0, lambda o: o["agg_weights"][0].__setitem__(0, -0.5)),
+        TraceIntegrityError),
+    "nan_agg_weight": (
+        lambda ls: _mut_json(
+            ls, 0, lambda o: o["agg_weights"][0].__setitem__(0, None)),
+        (TraceFormatError, TraceIntegrityError)),
+    "times_unordered": (
+        lambda ls: _mut_json(ls, 1, lambda o: o.update(t_end=-5.0)),
+        TraceIntegrityError),
+    "bits_out_of_range": (
+        lambda ls: _mut_json(ls, 1, lambda o: o.update(bits=64)),
+        TraceIntegrityError),
+}
+
+
+def test_clean_trace_round_trips():
+    t = SimTrace.from_lines(_lines())
+    assert len(t.windows) == 3
+    assert t.validate() is t
+    sched = t.schedule()
+    assert [w.kbar0 for w in sched] == [0, K, 2 * K]
+    assert all(w.bits == 32 for w in sched)
+
+
+@pytest.mark.parametrize("name", sorted(TRACE_CORRUPTIONS))
+def test_each_corruption_raises_typed_error(name):
+    mutate, err = TRACE_CORRUPTIONS[name]
+    lines = mutate(_lines())
+    with pytest.raises(err):
+        SimTrace.from_lines(lines)
+    # every typed error is still a ValueError (compat contract)
+    with pytest.raises(ValueError):
+        SimTrace.from_lines(lines)
+
+
+@settings(max_examples=30)
+@given(name=st.sampled_from(sorted(TRACE_CORRUPTIONS)),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_corruption_never_loads_silently(name, seed):
+    """Property: for any base trace content, every corruption from the
+    catalogue raises a TraceError — never returns a trace object."""
+    mutate, _ = TRACE_CORRUPTIONS[name]
+    with pytest.raises(TraceError):
+        SimTrace.from_lines(mutate(_lines(seed=seed)))
+
+
+@settings(max_examples=15)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       windows=st.integers(min_value=1, max_value=5))
+def test_random_clean_traces_always_load(seed, windows):
+    t = _trace(windows=windows, seed=seed)
+    t2 = SimTrace.from_lines(t.to_lines())
+    assert len(t2.windows) == windows
+    assert len(t2.schedule()) == windows
+
+
+def test_validate_off_still_reads_bytes():
+    """validate=False loads structurally sound but inconsistent traces
+    (forensics on a corrupt artifact) — integrity errors only fire when
+    validation or schedule export runs."""
+    lines = TRACE_CORRUPTIONS["shuffled_windows"][0](_lines())
+    t = SimTrace.from_lines(lines, validate=False)
+    with pytest.raises(TraceIntegrityError):
+        t.validate()
+    with pytest.raises(TraceIntegrityError):
+        t.schedule()
+
+
+def test_error_hierarchy():
+    for err in (TraceFormatError, TraceSchemaError, TraceIntegrityError):
+        assert issubclass(err, TraceError)
+        assert issubclass(err, ValueError)
+    for err in (ObsFormatError, ObsSchemaError):
+        assert issubclass(err, ObsError)
+        assert issubclass(err, ValueError)
+
+
+# ------------------------------------------------------------- obs streams
+def _obs_lines(version: int = 2) -> list:
+    head = make_obs_header(clock="virtual")
+    head["version"] = version
+    s = ObsStream(header=head, events=[
+        {"kind": "span", "name": "sim/window", "t0": 0.0, "t1": 1.0},
+        {"kind": "flush", "t": 1.0, "counters": {"sim/windows": 1.0},
+         "gauges": {}, "hists": {}},
+        {"kind": "summary", "counters": {"sim/windows": 1.0}, "gauges": {},
+         "spans": {"sim/window": {"count": 1, "total_s": 1.0}}, "hists": {}},
+    ])
+    return s.to_lines()
+
+
+OBS_CORRUPTIONS = {
+    "empty": (lambda ls: [], ObsFormatError),
+    "truncated_header": (lambda ls: [ls[0][:-4]] + ls[1:], ObsFormatError),
+    "header_not_object": (lambda ls: ['"hi"'] + ls[1:], ObsFormatError),
+    "foreign_schema": (
+        lambda ls: [json.dumps({**json.loads(ls[0]), "schema": "x.y"})]
+        + ls[1:], ObsSchemaError),
+    "future_version": (
+        lambda ls: [json.dumps({**json.loads(ls[0]), "version": 42})]
+        + ls[1:], ObsSchemaError),
+    "truncated_event": (lambda ls: ls[:-1] + [ls[-1][: len(ls[-1]) // 2]],
+                        ObsFormatError),
+    "event_not_object": (lambda ls: ls[:1] + ["[]"] + ls[1:],
+                         ObsFormatError),
+    "event_without_kind": (
+        lambda ls: ls[:1] + [json.dumps({"name": "x"})] + ls[1:],
+        ObsFormatError),
+    "event_kind_not_string": (
+        lambda ls: ls[:1] + [json.dumps({"kind": 7})] + ls[1:],
+        ObsFormatError),
+}
+
+
+@pytest.mark.parametrize("version", [1, 2])
+def test_clean_obs_stream_loads_both_versions(version):
+    s = ObsStream.from_lines(_obs_lines(version))
+    assert s.header["version"] == version
+    assert s.summary is not None
+    assert len(s.events) == 2
+
+
+@pytest.mark.parametrize("name", sorted(OBS_CORRUPTIONS))
+def test_each_obs_corruption_raises_typed_error(name):
+    mutate, err = OBS_CORRUPTIONS[name]
+    with pytest.raises(err):
+        ObsStream.from_lines(mutate(_obs_lines()))
+
+
+@settings(max_examples=20)
+@given(name=st.sampled_from(sorted(OBS_CORRUPTIONS)),
+       version=st.sampled_from([1, 2]))
+def test_obs_corruption_never_loads_silently(name, version):
+    mutate, _ = OBS_CORRUPTIONS[name]
+    with pytest.raises(ObsError):
+        ObsStream.from_lines(mutate(_obs_lines(version)))

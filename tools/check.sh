@@ -44,6 +44,17 @@
 #                             trace-event JSON via tools/obs_trace_export.py
 #                             and self-compared with tools/obs_diff.py
 #                             (must exit 0).
+#   tools/check.sh --metal    metal lane: the sim-to-metal conformance
+#                             harness under 8 virtual CPU devices — the
+#                             MetalReplay conformance/fault-injection suite
+#                             (fp32 bit-exact, bits<32 quantization band,
+#                             churn/straggler replay, the two-process TCP
+#                             deployment) plus the trace/obs loader fuzz
+#                             suite, then an end-to-end smoke: record a
+#                             churn_dropout trace via launch/sim.py and
+#                             replay it on metal with --check --fault-inject,
+#                             diffing the sim and metal obs streams with
+#                             tools/obs_diff.py (must exit 0).
 #   tools/check.sh --docs     docs lane: runnable doctests of the repro.sim
 #                             and repro.obs public APIs, then
 #                             tools/docs_check.py — a link/anchor/code-path
@@ -94,6 +105,23 @@ elif [[ "${1:-}" == "--obs" ]]; then
     "$tmp/obs.jsonl" -o "$tmp/trace.json"
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python tools/obs_diff.py \
     "$tmp/obs.jsonl" "$tmp/obs.jsonl"
+elif [[ "${1:-}" == "--metal" ]]; then
+  shift
+  XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
+    tests/test_metal_conformance.py tests/test_trace_fuzz.py \
+    tests/test_obs_golden.py "$@"
+  tmp="$(mktemp -d)"; trap 'rm -rf "$tmp"' EXIT
+  XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.sim \
+    --scenario churn_dropout --devices 12 --rounds 5 --eval-every 5 \
+    --record "$tmp/trace.jsonl" --obs "$tmp/sim_obs.jsonl" > "$tmp/sim.out"
+  XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.replay \
+    --trace "$tmp/trace.jsonl" --check --fault-inject \
+    --obs "$tmp/metal_obs.jsonl"
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python tools/obs_diff.py \
+    "$tmp/sim_obs.jsonl" "$tmp/metal_obs.jsonl"
 elif [[ "${1:-}" == "--docs" ]]; then
   shift
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \

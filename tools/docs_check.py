@@ -13,7 +13,9 @@ ROADMAP.md and docs/*.md:
    ``src/repro/`` (the paper-map shorthand, e.g. `core/walk.py`). Tokens
    with spaces, globs, ``::`` or no path separator are ignored.
 3. **API coverage**: every name in ``repro.sim.__all__`` (parsed from the
-   package ``__init__.py``, no imports) must appear in docs/SIMULATOR.md —
+   package ``__init__.py`` folding in the ``repro.sim.metal`` submodule
+   ``__all__``, no imports) must appear in docs/SIMULATOR.md — along with
+   the ``launch/replay.py``/``launch/mesh.py`` deployment entry points —
    and likewise ``repro.obs.__all__`` (folding in the ``repro.obs.trace``
    and ``repro.obs.critical`` submodule ``__all__``) in
    docs/OBSERVABILITY.md — as must the current trace/obs schema version
@@ -98,10 +100,16 @@ def check_sim_api_coverage(problems: list[str]) -> None:
         return
     names: list[str] = []
     version = None
-    for node in ast.walk(ast.parse(init.read_text())):
-        if isinstance(node, ast.Assign) and any(
-                getattr(t, "id", "") == "__all__" for t in node.targets):
-            names = [ast.literal_eval(e) for e in node.value.elts]
+    # the package surface plus the metal submodule's own __all__ (defense
+    # in depth, same as the obs check: the sim-to-metal deployment surface
+    # must stay documented even if a package re-export is dropped)
+    for mod in (init, ROOT / "src" / "repro" / "sim" / "metal.py"):
+        for node in ast.walk(ast.parse(mod.read_text())):
+            if isinstance(node, ast.Assign) and any(
+                    getattr(t, "id", "") == "__all__" for t in node.targets):
+                names += [n for n in
+                          (ast.literal_eval(e) for e in node.value.elts)
+                          if n not in names]
     for node in ast.walk(ast.parse(
             (ROOT / "src" / "repro" / "sim" / "trace.py").read_text())):
         if isinstance(node, ast.Assign) and any(
@@ -117,6 +125,13 @@ def check_sim_api_coverage(problems: list[str]) -> None:
     if version is None or f"TRACE_SCHEMA_VERSION = {version}" not in text:
         problems.append(
             f"docs/SIMULATOR.md: trace schema version {version} not stated")
+    # the deployment side of the harness: the launcher itself has no
+    # __all__, so pin its documentation by path
+    for path in ("launch/replay.py", "launch/mesh.py"):
+        if path not in text:
+            problems.append(
+                f"docs/SIMULATOR.md: trace-driven deployment entry "
+                f"`{path}` undocumented")
 
 
 def check_obs_api_coverage(problems: list[str]) -> None:
